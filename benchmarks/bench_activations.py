@@ -1,0 +1,48 @@
+"""Table 1: HardSigmoid* implementation methods x fixed-point configs.
+
+FPGA metrics (logic delay, LUTs) map to: measured CPU wall-clock of the
+XLA-compiled integer implementation (delay analogue) and structural cost
+(table entries / comparator count — the resource analogue).  The paper's
+finding to reproduce: the best method depends on the fixed-point config
+(step wins at (4,8); 1to1 wins at higher fractional widths where the step
+comparator cascade blows up).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hard_act as ha
+from repro.core.fixed_point import FXP_4_8, FXP_6_8, FXP_8_10
+
+CONFIGS = [("(4,8)", FXP_4_8), ("(6,8)", FXP_6_8), ("(8,10)", FXP_8_10)]
+METHODS = ("arithmetic", "1to1", "step")
+N = 1 << 16
+
+
+def _time(fn, x, iters=30):
+    fn(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(x)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for cname, cfg in CONFIGS:
+        x = jnp.asarray(rng.integers(cfg.int_min, cfg.int_max + 1, N)
+                        .astype(np.int32))
+        for m in METHODS:
+            spec = ha.HardSigmoidStarSpec(cfg)
+            fn = jax.jit(lambda t, s=spec, m=m: ha.hs_star_int(t, s, m))
+            us = _time(fn, x)
+            entries = {"arithmetic": 2,  # shift + add
+                       "1to1": ha.num_1to1_entries(spec),
+                       "step": ha.num_step_entries(spec)}[m]
+            rows.append((f"t1_hardsigmoid_{cname}_{m}", us, entries))
+    return rows

@@ -1,0 +1,28 @@
+"""Beyond-paper: the 40-cell roofline table as a benchmark surface.
+
+Reads results/dryrun.json (produced by the multi-pod dry-run sweep) and
+emits each single-pod cell's roofline-projected step time and the dominant
+term — the §Roofline deliverable in CSV form.  `us_per_call` is the
+projected TPU step latency; `derived` is the useful-FLOPs ratio.
+"""
+
+import json
+import os
+
+RESULTS = os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json")
+
+
+def run():
+    rows = []
+    if not os.path.exists(RESULTS):
+        return [("cells_missing_run_dryrun_first", 0.0, 0)]
+    with open(RESULTS) as f:
+        rs = json.load(f)
+    for r in rs:
+        if r.get("status") != "ok" or r.get("mesh") != "16x16":
+            continue
+        t = r["roofline"]
+        rows.append((f"cell_{r['arch']}_{r['shape']}_{t['bound']}",
+                     round(t["step_s"] * 1e6, 1),
+                     round(r.get("useful_flops_ratio") or 0, 3)))
+    return sorted(rows)

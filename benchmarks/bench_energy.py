@@ -1,0 +1,69 @@
+"""Table 4: power & energy efficiency comparison.
+
+Reproduces the structure of the paper's Table 4 with the TPU energy model
+(core/energy.py): static/dynamic power split, energy per inference,
+throughput and GOP/s/W, for:
+  (a) the [15]-baseline datapath ((8,16), LUT acts, non-pipelined),
+  (b) this-work on the MXU ('8 DSPs' column),
+  (c) this-work on the VPU ('0 DSPs' column — the paper's headline option).
+Latency inputs are the measured CPU relative latencies scaled to the
+paper's absolute operating point (28.07 us for this-work), so the relative
+energy story matches Table 3/4 while absolute watts come from the TPU
+model.  `derived` = GOP/s/W.
+"""
+
+from repro.core.accelerator import (AcceleratorConfig, BASELINE_15,
+                                    PAPER_DEFAULT, PAPER_NO_MXU, plan)
+from repro.core.energy import power_report
+from repro.core.qlstm import QLSTMConfig, ops_per_inference
+from benchmarks.bench_throughput import _mk, _time
+
+
+def run():
+    cfgs = {
+        "t4_baseline15": (BASELINE_15, None),
+        "t4_thiswork_mxu": (PAPER_DEFAULT, "mxu"),
+        "t4_thiswork_vpu": (PAPER_NO_MXU, "vpu"),
+    }
+    model = QLSTMConfig()
+    ops = ops_per_inference(model)
+
+    # measured relative latency (CPU, XLA-compiled): baseline vs this-work
+    from repro.core.qlstm import ActivationConfig, BASELINE_ACTS
+    from repro.core.fixed_point import FXP_8_16
+    fn_b, xi_b = _mk(QLSTMConfig(acts=BASELINE_ACTS, fxp=FXP_8_16,
+                                 alu_mode="per_step"))
+    fn_t, xi_t = _mk(QLSTMConfig())
+    rel = _time(fn_b, xi_b) / _time(fn_t, xi_t)
+
+    lat_tw = 28.07e-6                       # paper's this-work latency
+    lat_by_name = {"t4_baseline15": lat_tw * rel,
+                   "t4_thiswork_mxu": lat_tw,
+                   "t4_thiswork_vpu": lat_tw}
+    rows = []
+    for name, (acc, unit) in cfgs.items():
+        p = plan(model, acc)
+        lat = lat_by_name[name]
+        rep = power_report(flops=ops, hbm_bytes=p["weight_bytes"],
+                           ici_bytes=0, latency_s=lat,
+                           unit=p["compute_unit"],
+                           dtype="int8" if acc.fxp.total_bits <= 8 else "bf16")
+        rows.append((name + "_gops_per_w", lat * 1e6,
+                     round(rep["gops_per_watt"], 4)))
+        rows.append((name + "_energy_uj", lat * 1e6,
+                     round(rep["energy_j"] * 1e6, 3)))
+
+    # TPU-scale rows: the FPGA amortises 32 mW of static power over one
+    # stream; a TPU must amortise ~60 W over BATCHED streams.  At MXU/VPU
+    # saturation (weights VMEM-resident, C4's BRAM mode) the energy
+    # efficiency is bounded by the unit's ops/J — the paper's DSP-vs-LUT
+    # column pair at datacenter scale.
+    from repro.core import energy as E
+    for name, peak, e_op in [
+            ("t4_tpu_saturated_mxu_int8", E.PEAK_INT8_OPS, E.E_MXU_INT8_J_PER_OP),
+            ("t4_tpu_saturated_mxu_bf16", E.PEAK_BF16_FLOPS, E.E_MXU_BF16_J_PER_FLOP),
+            ("t4_tpu_saturated_vpu", E.PEAK_VPU_FLOPS, E.E_VPU_J_PER_FLOP)]:
+        gops = peak / 1e9
+        watts = E.P_STATIC_W + peak * e_op
+        rows.append((name + "_gops_per_w", 0.0, round(gops / watts, 2)))
+    return rows

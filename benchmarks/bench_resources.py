@@ -1,0 +1,45 @@
+"""Figures 4/5: resource utilisation vs hidden size, with the AUTO
+spill point.
+
+FPGA resources -> TPU analogues: BRAM% -> weight bytes vs an (emulated)
+fast-memory budget with the AUTO BRAM->LUTRAM spill reproduced as
+vmem->hbm; DSP% -> MXU tile fill fraction.  Two sweeps like the paper's two
+figures: compute_unit = vpu ('without DSPs') and mxu ('with DSPs').
+`derived` = weight KiB at that hidden size; spill rows mark the AUTO
+decision flip.
+"""
+
+from repro.core.accelerator import (AcceleratorConfig, lstm_weight_bytes,
+                                    plan, resolve_weight_memory)
+from repro.core.qlstm import QLSTMConfig
+
+# Scaled budget reproducing the paper's BRAM exhaustion near hidden=130
+# (XC7S15: 10x 18Kb BRAM): weight bytes at the paper's spill point.
+FPGA_SCALE_BUDGET = lstm_weight_bytes(
+    QLSTMConfig(hidden_size=130), AcceleratorConfig())
+
+
+def run():
+    rows = []
+    for unit in ("vpu", "mxu"):
+        for h in (20, 60, 100, 130, 180, 200):
+            model = QLSTMConfig(hidden_size=h)
+            acc = AcceleratorConfig(compute_unit=unit,
+                                    vmem_budget=FPGA_SCALE_BUDGET)
+            p = plan(model, acc)
+            spilled = 0 if p["vmem_resident"] else 1
+            rows.append((f"f45_{unit}_h{h}_weights_kib_spill{spilled}",
+                         0.0, round(p["weight_bytes"] / 1024, 2)))
+        # MXU fill (the DSP-occupancy analogue) at the paper's model size
+        p20 = plan(QLSTMConfig(hidden_size=20),
+                   AcceleratorConfig(compute_unit="mxu"))
+        rows.append((f"f45_mxu_fill_h20", 0.0,
+                     round(p20["mxu_fill_fraction"], 4)))
+    # Real TPU budget: no spill until far larger hidden sizes
+    acc_tpu = AcceleratorConfig()
+    h = 200
+    while resolve_weight_memory(QLSTMConfig(hidden_size=h), acc_tpu) == "vmem" \
+            and h < 60000:
+        h *= 2
+    rows.append(("f45_tpu_vmem_spill_hidden", 0.0, h))
+    return rows

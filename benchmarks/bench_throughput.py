@@ -1,0 +1,75 @@
+"""Table 3: accelerator throughput across the optimisation ladder.
+
+Columns of the paper's Table 3, re-expressed:
+  [15]-baseline : (8,16) fixed point, 256-entry LUT Sigmoid/Tanh,
+                  NON-pipelined ALU (per-product rounding, element-serial).
+  hard-*        : HardSigmoid*(method)+HardTanh, still non-pipelined.
+  pipelined+step: late-rounding MAC (matmul datapath) + step activations —
+                  the full 'this work' configuration (2.04x in the paper).
+
+Measured as XLA-compiled CPU wall-clock per batched inference; `derived` is
+the speedup over the [15] baseline (the paper's 'Improvement' row).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fxp
+from repro.core.fixed_point import FXP_4_8, FXP_8_16
+from repro.core.qlstm import (ActivationConfig, BASELINE_ACTS, QLSTMConfig,
+                              forward_int, init_params, quantize_params,
+                              ops_per_inference)
+
+BATCH = 256
+
+
+def _mk(cfg):
+    params = init_params(cfg, jax.random.key(0))
+    qp = quantize_params(params, cfg)
+    x = jax.random.normal(jax.random.key(1), (BATCH, cfg.seq_len,
+                                              cfg.input_size)) * 0.5
+    xi = fxp.quantize(x, cfg.fxp)
+    fn = jax.jit(lambda xi: forward_int(qp, xi, cfg))
+    fn(xi).block_until_ready()
+    return fn, xi
+
+
+def _time(fn, x, iters=20):
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(x)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    variants = [
+        ("t3_baseline15_lut_perstep",
+         QLSTMConfig(acts=BASELINE_ACTS, fxp=FXP_8_16, alu_mode="per_step")),
+        ("t3_hard_arithmetic_perstep",
+         QLSTMConfig(acts=ActivationConfig(hs_method="arithmetic"),
+                     alu_mode="per_step")),
+        ("t3_hard_1to1_perstep",
+         QLSTMConfig(acts=ActivationConfig(hs_method="1to1"),
+                     alu_mode="per_step")),
+        ("t3_hard_step_perstep",
+         QLSTMConfig(acts=ActivationConfig(hs_method="step"),
+                     alu_mode="per_step")),
+        ("t3_pipelined_step_thiswork",
+         QLSTMConfig(acts=ActivationConfig(hs_method="step"),
+                     alu_mode="pipelined")),
+    ]
+    rows = []
+    base_us = None
+    ops = ops_per_inference(QLSTMConfig()) * BATCH
+    for name, cfg in variants:
+        fn, xi = _mk(cfg)
+        us = _time(fn, xi)
+        if base_us is None:
+            base_us = us
+        rows.append((name, us, round(base_us / us, 3)))
+    rows.append(("t3_thiswork_gops_cpu", us, round(ops / us / 1e3, 3)))
+    return rows

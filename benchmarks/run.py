@@ -1,0 +1,29 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [table1 table3 table4 fig45 cells]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_activations, bench_cells, bench_energy,
+                            bench_resources, bench_throughput)
+    suites = {
+        "table1": bench_activations.run,
+        "table3": bench_throughput.run,
+        "table4": bench_energy.run,
+        "fig45": bench_resources.run,
+        "cells": bench_cells.run,
+    }
+    want = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for key in want:
+        for name, us, derived in suites[key]():
+            print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""The paper's §6.1 experiment, end to end (e2e training driver).
+
+Trains the LSTM+dense model with Quantisation-Aware Training on PeMS-like
+traffic data, then reports MSE for: float / QAT / the bit-exact int8
+accelerator datapath (fused Pallas kernel).  Checkpoints land in
+/tmp/repro_lstm_ckpt — rerun to resume; Ctrl-C checkpoints-and-exits
+(the fault-tolerance contract).
+
+Run:  PYTHONPATH=src python examples/train_lstm_pems.py [--steps 400]
+"""
+import sys
+sys.argv = [sys.argv[0], "--arch", "lstm-pems",
+            "--ckpt-dir", "/tmp/repro_lstm_ckpt"] + sys.argv[1:]
+from repro.launch.train import main
+main()

@@ -1,0 +1,15 @@
+"""Inject §Dry-run and §Roofline tables into EXPERIMENTS.md placeholders."""
+import io, json, sys, contextlib
+sys.path.insert(0, "src")
+from repro.analysis.report import dryrun_table, roofline_table
+
+rs = json.load(open("results/dryrun.json"))
+dr = ("### Single-pod 16x16 (256 chips)\n\n" + dryrun_table(rs, "16x16") +
+      "\n\n### Multi-pod 2x16x16 (512 chips)\n\n" + dryrun_table(rs, "2x16x16"))
+rf = roofline_table(rs)
+
+src = open("EXPERIMENTS.md").read()
+src = src.replace("<!-- DRYRUN_TABLES -->", dr)
+src = src.replace("<!-- ROOFLINE_TABLE -->", rf)
+open("EXPERIMENTS.md", "w").write(src)
+print("tables injected:", len(dr), "+", len(rf), "chars")

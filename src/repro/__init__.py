@@ -1,0 +1,6 @@
+"""repro: parameterised quantised-execution framework (JAX + Pallas).
+
+Reproduction & TPU scale-out of 'Energy Efficient LSTM Accelerators for
+Embedded FPGAs through Parameterised Architecture Design'.  See DESIGN.md.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,65 @@
+"""Optimized-HLO parsing: collective operand/result bytes per op kind.
+
+cost_analysis() does not report collective traffic, so the §Roofline
+collective term is derived by parsing the compiled module's text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(including async -start forms, excluding -done echoes) we sum the RESULT
+buffer sizes.  SPMD modules are per-device, so these are per-device bytes —
+consistent with the per-device compute/memory terms.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result types: everything between '=' and the op name, e.g.
+#   %ag = bf16[4,128]{1,0} all-gather(...)
+#   %ar = (f32[8]{0}, f32[8]{0}) all-reduce-start(...)
+_LINE_RE = re.compile(
+    r"=\s*(?P<types>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<suffix>-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(types: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(types):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes by collective kind (+ 'total' and 'count')."""
+    out: Dict[str, float] = defaultdict(float)
+    count = 0
+    for m in _LINE_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue  # the -start already carries the payload
+        b = _shape_bytes(m.group("types"))
+        # async -start results are (input, output[, context]) tuples; the
+        # payload moved is ~ the output. Halve the tuple double-count.
+        if m.group("suffix") == "-start":
+            b = b / 2
+        out[m.group("op")] += b
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k in _COLLECTIVES)
+    out["count"] = count
+    return dict(out)

@@ -1,0 +1,7 @@
+"""The paper's own model: 1 LSTM cell (hidden 20) + dense, PeMS-4W
+single-step-ahead traffic prediction, (4,8) fixed point, HardSigmoid*/
+HardTanh — §6.1 experimental settings."""
+from repro.core.qlstm import QLSTMConfig, PAPER_ACTS
+
+CONFIG = QLSTMConfig(input_size=1, hidden_size=20, num_layers=1,
+                     out_features=1, seq_len=6, acts=PAPER_ACTS)

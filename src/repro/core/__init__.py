@@ -1,0 +1,20 @@
+# The paper's primary contribution — the parameterised quantised-execution
+# core: fixed-point datapath (C1), hard activations (C2), pipelined-ALU
+# semantics (C3), accelerator meta-parameters (C4), energy model (C5).
+from repro.core.fixed_point import (  # noqa: F401
+    FixedPointConfig, FXP_4_8, FXP_6_8, FXP_8_10, FXP_8_16,
+    quantize, dequantize, fake_quant, requantize,
+)
+from repro.core.hard_act import (  # noqa: F401
+    hard_tanh, hard_sigmoid, hard_sigmoid_star, hard_silu, hard_gelu,
+    HardSigmoidStarSpec, hs_star_int, HARDSIGMOID_METHODS,
+)
+from repro.core.quant import QuantConfig, QTensor, NO_QUANT, W8, W8A8  # noqa: F401
+from repro.core.qlstm import (  # noqa: F401
+    QLSTMConfig, ActivationConfig, PAPER_ACTS, BASELINE_ACTS, FLOAT_ACTS,
+    init_params, quantize_params, forward_float, forward_qat, forward_int,
+    ops_per_inference,
+)
+from repro.core.accelerator import (  # noqa: F401
+    AcceleratorConfig, PAPER_DEFAULT, PAPER_NO_MXU, BASELINE_15, plan,
+)

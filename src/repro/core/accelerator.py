@@ -1,0 +1,106 @@
+"""Parameterised accelerator configuration — the paper's Table 2 (C4),
+re-targeted from Spartan-7 resources to the TPU v5e execution model.
+
+FPGA meta-parameter            ->  TPU meta-parameter
+  ALU_resource_type DSP|LUT    ->  compute_unit      mxu|vpu
+  weight_resource_type
+      BRAM|LUTRAM|AUTO         ->  weight_memory     vmem|hbm|auto
+  HardSigmoid*_method          ->  hs_method         arithmetic|1to1|step
+  HardTanh_threshold           ->  ht_min/ht_max
+  hidden_size / input_size /
+  in_features / out_features   ->  (unchanged; QLSTMConfig)
+
+``plan()`` resolves AUTO decisions exactly like Vivado's BRAM->LUTRAM spill
+in the paper's Fig. 4/5: weights live in VMEM while they fit the VMEM
+budget, then spill to HBM streaming.  The plan feeds the Pallas kernel
+(`kernels/qlstm_cell.py`) and the energy model (`core/energy.py`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.fixed_point import FixedPointConfig, FXP_4_8
+from repro.core.qlstm import QLSTMConfig
+
+# TPU v5e per-core VMEM budget we allow the kernel to claim (bytes).  The
+# physical VMEM is ~128 MiB; we keep headroom for pipeline buffers, like the
+# paper keeps BRAM headroom for the dense layer.
+VMEM_BUDGET_BYTES = 96 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    """Table-2 implementation meta-parameters (TPU form)."""
+
+    compute_unit: str = "mxu"       # mxu (DSP) | vpu (LUT)
+    weight_memory: str = "auto"     # vmem (BRAM) | hbm (LUTRAM) | auto
+    hs_method: str = "step"         # arithmetic | 1to1 | step
+    ht_min: float = -1.0
+    ht_max: float = 1.0
+    pipelined_alu: bool = True      # C3: late-rounding pipelined MAC
+    fxp: FixedPointConfig = FXP_4_8
+    vmem_budget: int = VMEM_BUDGET_BYTES
+
+    def __post_init__(self):
+        if self.compute_unit not in ("mxu", "vpu"):
+            raise ValueError(f"compute_unit must be mxu|vpu, got {self.compute_unit}")
+        if self.weight_memory not in ("vmem", "hbm", "auto"):
+            raise ValueError(f"weight_memory must be vmem|hbm|auto")
+
+
+PAPER_DEFAULT = AcceleratorConfig()                      # "this work", col 5 of T4
+PAPER_NO_MXU = AcceleratorConfig(compute_unit="vpu")     # DSP-free variant, col 6
+BASELINE_15 = AcceleratorConfig(                         # Qian et al. [15]
+    compute_unit="mxu", hs_method="1to1", pipelined_alu=False,
+    fxp=FixedPointConfig(8, 16))
+
+
+def lstm_weight_bytes(model: QLSTMConfig, acc: AcceleratorConfig) -> int:
+    """Bytes of quantised weights+biases the accelerator must hold."""
+    itemsize = (acc.fxp.total_bits + 7) // 8
+    wide_itemsize = 2 * itemsize
+    total = 0
+    for li in range(model.num_layers):
+        m, h = model.layer_in_dim(li), model.hidden_size
+        total += (m + h) * 4 * h * itemsize + 4 * h * wide_itemsize
+    total += model.hidden_size * model.out_features * itemsize
+    total += model.out_features * wide_itemsize
+    return total
+
+
+def resolve_weight_memory(model: QLSTMConfig, acc: AcceleratorConfig) -> str:
+    """AUTO spill decision (Fig 4/5 analogue)."""
+    if acc.weight_memory != "auto":
+        return acc.weight_memory
+    return "vmem" if lstm_weight_bytes(model, acc) <= acc.vmem_budget else "hbm"
+
+
+def plan(model: QLSTMConfig, acc: AcceleratorConfig) -> Dict:
+    """Resolve every implementation decision for (model, accelerator).
+
+    Returned dict drives kernel dispatch and the energy/footprint report —
+    the TPU analogue of the paper's Vivado configuration point."""
+    wmem = resolve_weight_memory(model, acc)
+    wbytes = lstm_weight_bytes(model, acc)
+    return {
+        "compute_unit": acc.compute_unit,
+        "weight_memory": wmem,
+        "weight_bytes": wbytes,
+        "vmem_resident": wmem == "vmem",
+        "hs_method": acc.hs_method,
+        "pipelined_alu": acc.pipelined_alu,
+        "alu_mode": "pipelined" if acc.pipelined_alu else "per_step",
+        "fxp": acc.fxp,
+        # MXU tiles are 128x128: tiny LSTMs under-fill them, exactly like
+        # tiny models under-fill DSP columns.  Report the padding waste.
+        "mxu_fill_fraction": _mxu_fill(model) if acc.compute_unit == "mxu" else None,
+    }
+
+
+def _mxu_fill(model: QLSTMConfig) -> float:
+    m, h = model.layer_in_dim(0), model.hidden_size
+    k, n = m + h, 4 * h
+    pad = lambda d: -(-d // 128) * 128
+    return (k * n) / (pad(k) * pad(n))

@@ -1,0 +1,268 @@
+"""Fixed-point arithmetic — the paper's (a, b) quantisation datapath (contribution C1).
+
+Paper notation: ``(a, b)`` = ``a`` fractional bits out of ``b`` total bits.
+The standard configuration is ``(4, 8)``; the baseline [15] used ``(8, 16)``.
+
+Everything here simulates the FPGA integer datapath bit-exactly in int32
+carriers (hardware width is enforced by saturation), so that
+
+  * the pure-jnp reference (``kernels/ref.py``),
+  * the Pallas TPU kernels (``kernels/qlstm_cell.py`` etc.), and
+  * the QAT fake-quant graph (``training/qat.py``)
+
+all agree to the last bit / last LSB.
+
+Rounding conventions (documented because they are part of the paper's
+hardware semantics):
+
+  * ``f_round`` (Algorithm 1 line 5 / pipeline stage S5): *round half up*
+    — ``(v + 2**(s-1)) >> s`` with arithmetic shift — the cheap FPGA rounder.
+  * The HardSigmoid* slope division (``x / 8``) uses a *plain arithmetic
+    right shift* (truncation toward −∞).  This choice is what reproduces the
+    paper's own table sizes: 96 one-to-one LUT entries and 14 step entries
+    for the (4, 8) configuration (see ``core/hard_act.py`` and
+    ``tests/test_hard_act.py::test_paper_table_entry_counts``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+ArrayLike = Union[Array, float, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointConfig:
+    """The paper's ``(a, b)`` fixed-point format.
+
+    Attributes:
+      frac_bits:  ``a`` — number of fractional bits.
+      total_bits: ``b`` — total width in bits (including sign).
+      signed:     two's-complement when True.
+    """
+
+    frac_bits: int
+    total_bits: int
+    signed: bool = True
+
+    def __post_init__(self):
+        if self.total_bits < 2 or self.total_bits > 31:
+            raise ValueError(f"total_bits must be in [2, 31], got {self.total_bits}")
+        if self.frac_bits < 0 or self.frac_bits > self.total_bits:
+            raise ValueError(f"frac_bits must be in [0, total_bits]")
+
+    # --- integer range -----------------------------------------------------
+    @property
+    def int_min(self) -> int:
+        return -(1 << (self.total_bits - 1)) if self.signed else 0
+
+    @property
+    def int_max(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1 if self.signed else (1 << self.total_bits) - 1
+
+    @property
+    def scale(self) -> float:
+        """Value of one LSB: 2**-a."""
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def min_value(self) -> float:
+        return self.int_min * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.int_max * self.scale
+
+    @property
+    def num_values(self) -> int:
+        return 1 << self.total_bits
+
+    # --- dtype selection ---------------------------------------------------
+    @property
+    def storage_dtype(self):
+        """Narrowest native dtype that stores the integer code."""
+        if self.total_bits <= 8:
+            return jnp.int8
+        if self.total_bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    def __str__(self) -> str:  # paper's "(a,b)" notation
+        return f"({self.frac_bits},{self.total_bits})"
+
+
+# Canonical configurations used throughout the paper.
+FXP_4_8 = FixedPointConfig(4, 8)       # this work's standard
+FXP_6_8 = FixedPointConfig(6, 8)       # Table 1 variant
+FXP_8_10 = FixedPointConfig(8, 10)     # Table 1 variant
+FXP_8_16 = FixedPointConfig(8, 16)     # baseline [15]
+FXP_8_16_ACC = FixedPointConfig(8, 16)  # product/accumulator format of (4,8)x(4,8)
+FXP_8_32_ACC = FixedPointConfig(8, 32 - 1)  # wide TPU accumulator (int32 carrier)
+
+
+# ---------------------------------------------------------------------------
+# Integer-domain primitives (bit-exact hardware semantics)
+# ---------------------------------------------------------------------------
+
+def saturate(v: Array, cfg: FixedPointConfig) -> Array:
+    """Clamp an int32 carrier to the cfg's representable integer range."""
+    return jnp.clip(v, cfg.int_min, cfg.int_max)
+
+
+def round_shift_right(v: Array, shift: int) -> Array:
+    """Round-half-up arithmetic right shift: the paper's ``f_round`` core.
+
+    ``(v + 2**(shift-1)) >> shift``.  For shift == 0 it is the identity.
+    """
+    if shift == 0:
+        return v
+    return (v + (1 << (shift - 1))) >> shift
+
+
+def trunc_shift_right(v: Array, shift: int) -> Array:
+    """Plain arithmetic right shift (truncation toward −∞)."""
+    if shift == 0:
+        return v
+    return v >> shift
+
+
+def requantize(v: Array, src: FixedPointConfig, dst: FixedPointConfig,
+               rounding: str = "half_up") -> Array:
+    """f_round: convert integer codes between fixed-point formats.
+
+    E.g. the paper's ``mul16 (8,16) -> mul8 (4,8)`` is
+    ``requantize(v, FXP_8_16, FXP_4_8)``.
+    """
+    shift = src.frac_bits - dst.frac_bits
+    if shift < 0:
+        v = v << (-shift)
+    elif rounding == "half_up":
+        v = round_shift_right(v, shift)
+    elif rounding == "trunc":
+        v = trunc_shift_right(v, shift)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return saturate(v, dst)
+
+
+# ---------------------------------------------------------------------------
+# Float <-> fixed-point conversion
+# ---------------------------------------------------------------------------
+
+def quantize(x: ArrayLike, cfg: FixedPointConfig, rounding: str = "half_up") -> Array:
+    """Float -> integer code (int32 carrier), saturating."""
+    x = jnp.asarray(x, jnp.float32)
+    scaled = x * (1 << cfg.frac_bits)
+    if rounding == "half_up":
+        v = jnp.floor(scaled + 0.5)
+    elif rounding == "nearest_even":
+        v = jnp.round(scaled)
+    elif rounding == "trunc":
+        v = jnp.trunc(scaled)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return saturate(v.astype(jnp.int32), cfg)
+
+
+def dequantize(v: Array, cfg: FixedPointConfig) -> Array:
+    """Integer code -> float."""
+    return v.astype(jnp.float32) * cfg.scale
+
+
+def quantize_to_storage(x: ArrayLike, cfg: FixedPointConfig) -> Array:
+    """Float -> integer code in the narrowest native dtype (int8/int16/int32)."""
+    return quantize(x, cfg).astype(cfg.storage_dtype)
+
+
+def fake_quant(x: Array, cfg: FixedPointConfig) -> Array:
+    """Straight-through-estimator fake quantisation (QAT building block).
+
+    Forward: dequantize(quantize(x)); backward: identity inside the
+    representable range (gradients pass through; saturation clips them the
+    same way the forward clips values).
+    """
+    q = dequantize(quantize(x, cfg), cfg)
+    # Clip the STE pass-through so gradients vanish outside the range
+    # (standard QAT practice; matches hardware saturation).
+    xc = jnp.clip(x, cfg.min_value, cfg.max_value)
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point multiply / MAC (Algorithm 1 semantics)
+# ---------------------------------------------------------------------------
+
+def product_config(a: FixedPointConfig, b: FixedPointConfig) -> FixedPointConfig:
+    """Format of a full-precision product: fracs add, widths add.
+
+    (4,8)x(4,8) -> (8,16), as in Algorithm 1 line 4."""
+    return FixedPointConfig(a.frac_bits + b.frac_bits,
+                            min(a.total_bits + b.total_bits, 31))
+
+
+def fxp_mul(x: Array, w: Array, cfg_x: FixedPointConfig, cfg_w: FixedPointConfig) -> Array:
+    """Integer product in the widened format (no rounding — exact)."""
+    return x.astype(jnp.int32) * w.astype(jnp.int32)
+
+
+def fxp_mac_per_step_rounding(x: Array, w: Array, cfg: FixedPointConfig) -> Array:
+    """Algorithm 1 *as printed*: round every product back to (a,b) before
+    accumulating.  This is the NON-pipelined baseline datapath.
+
+    x: (..., N) int codes, w: (..., N) int codes -> (...,) accumulated code in
+    cfg (saturating at each add, as a b-bit accumulator would).
+    """
+    prod_cfg = product_config(cfg, cfg)
+
+    def body(acc, xw):
+        xi, wi = xw
+        m16 = fxp_mul(xi, wi, cfg, cfg)
+        m8 = requantize(m16, prod_cfg, cfg)
+        return saturate(acc + m8, cfg), None
+
+    xs = jnp.moveaxis(x.astype(jnp.int32), -1, 0)
+    ws = jnp.moveaxis(w.astype(jnp.int32), -1, 0)
+    acc0 = jnp.zeros(jnp.broadcast_shapes(xs.shape[1:], ws.shape[1:]), jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, (xs, ws))
+    return acc
+
+
+def fxp_mac_late_rounding(x: Array, w: Array, cfg: FixedPointConfig,
+                          acc_bits: int = 32) -> Array:
+    """The pipelined-ALU datapath (S1–S5): accumulate products at FULL width,
+    round ONCE at the end (pipeline stage S5).  This is both faster in
+    hardware and more accurate; it is also exactly what an MXU int8 matmul
+    with an int32 accumulator computes, which is why the Pallas kernel can be
+    bit-exact against this reference.
+
+    Returns the accumulated code in ``cfg`` (rounded + saturated once).
+    """
+    prod_cfg = product_config(cfg, cfg)
+    acc = jnp.sum(x.astype(jnp.int32) * w.astype(jnp.int32), axis=-1)
+    if acc_bits < 32:
+        wide = FixedPointConfig(prod_cfg.frac_bits, acc_bits)
+        acc = saturate(acc, wide)
+    return requantize(acc, prod_cfg, cfg)
+
+
+def fxp_matvec_late_rounding(x: Array, w: Array, bias: Array,
+                             cfg: FixedPointConfig) -> Array:
+    """Integer matmul + bias with late rounding: ``round(x @ w + bias_wide)``.
+
+    x: (..., K) codes in cfg; w: (K, N) codes in cfg;
+    bias: (N,) codes in the *product* format (2a frac bits) so it adds into
+    the wide accumulator before the single rounding — the hardware keeps the
+    bias at accumulator precision.
+    """
+    prod_cfg = product_config(cfg, cfg)
+    acc = jax.lax.dot_general(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc = acc + bias.astype(jnp.int32)
+    return requantize(acc, prod_cfg, cfg)

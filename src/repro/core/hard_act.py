@@ -1,0 +1,269 @@
+"""Hard activation functions — the paper's contribution C2.
+
+Float domain (for training / QAT) and integer domain (bit-exact hardware
+semantics) implementations of:
+
+  * HardTanh        — clip(x, min_val, max_val); 5 LUTs on the FPGA, a pair
+                      of VPU selects on TPU.
+  * HardSigmoid*    — the paper's customised HardSigmoid: slope 2**-k
+                      (bit-shiftable; k=3 -> slope 0.125 for the (4,8)
+                      standard config), saturation bounds ±3 (inherited from
+                      the PyTorch HardSigmoid), THREE interchangeable
+                      implementations:
+        - ``arithmetic``: shift + add                      (2 sequential ops)
+        - ``1to1``      : full lookup table                (gather)
+        - ``step``      : merged step-function thresholds  (nested selects)
+    All three are bit-identical by construction (the tables are derived from
+    the arithmetic definition); which is *fastest* depends on the fixed-point
+    configuration — the paper's Table 1, reproduced by
+    ``benchmarks/bench_activations.py``.
+
+  * LUT Sigmoid/Tanh — the 256-entry lookup-table activations of the baseline
+    [15], implemented for the baseline comparison.
+
+Paper-faithfulness notes:
+  * The slope division uses a *truncating* arithmetic shift.  Together with
+    the linear region ``[-3, 3)`` this reproduces the paper's reported table
+    sizes for (4,8): 96 one-to-one entries and 14 step entries.
+  * ``hard_silu`` / ``hard_gelu`` extend C2 beyond the paper to the GLU
+    activations of the assigned LM architectures (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixed_point import (
+    FixedPointConfig,
+    quantize,
+    saturate,
+    trunc_shift_right,
+)
+
+Array = jax.Array
+
+HARDSIGMOID_METHODS = ("arithmetic", "1to1", "step")
+
+
+# ---------------------------------------------------------------------------
+# Float domain
+# ---------------------------------------------------------------------------
+
+def hard_tanh(x: Array, min_val: float = -1.0, max_val: float = 1.0) -> Array:
+    return jnp.clip(x, min_val, max_val)
+
+
+def hard_sigmoid(x: Array) -> Array:
+    """PyTorch HardSigmoid: relu6(x + 3) / 6 == clip(x/6 + 1/2, 0, 1)."""
+    return jnp.clip(x / 6.0 + 0.5, 0.0, 1.0)
+
+
+def hard_sigmoid_star(x: Array, slope: float = 0.125, bound: float = 3.0) -> Array:
+    """The paper's HardSigmoid*: configurable slope, saturation at ±bound.
+
+    Linear region is ``[-bound, bound)`` (half-open; see module docstring).
+    Note the (intentional, paper-faithful) small jumps at the bounds when
+    slope != 1/(2*bound).
+    """
+    lin = x * slope + 0.5
+    return jnp.where(x < -bound, 0.0, jnp.where(x >= bound, 1.0, lin))
+
+
+def hard_silu(x: Array) -> Array:
+    """HardSwish: x * HardSigmoid(x) — drop-in hard replacement for SiLU."""
+    return x * hard_sigmoid(x)
+
+
+def hard_gelu(x: Array) -> Array:
+    """Hard approximation of GELU: x * HardSigmoid(1.702 * x).
+
+    (The sigmoid-form GELU approximation with the sigmoid hardened.)"""
+    return x * hard_sigmoid(1.702 * x)
+
+
+def get_float_act(name: str):
+    return {
+        "sigmoid": jax.nn.sigmoid,
+        "tanh": jnp.tanh,
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": functools.partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+        "hard_tanh": hard_tanh,
+        "hard_sigmoid": hard_sigmoid,
+        "hard_sigmoid_star": hard_sigmoid_star,
+        "hard_silu": hard_silu,
+        "hard_gelu": hard_gelu,
+    }[name]
+
+
+HARD_VARIANT = {  # soft activation -> its hard replacement (C2 beyond-paper)
+    "sigmoid": "hard_sigmoid_star",
+    "tanh": "hard_tanh",
+    "silu": "hard_silu",
+    "gelu": "hard_gelu",
+    "gelu_tanh": "hard_gelu",
+    "relu": "relu",
+    "relu2": "relu2",
+}
+
+
+# ---------------------------------------------------------------------------
+# Integer domain — HardSigmoid* (three methods, bit-identical)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HardSigmoidStarSpec:
+    """Fixed-point HardSigmoid* specification.
+
+    slope = 2**-slope_shift (the bit-shiftable slope of §4.2; slope_shift=3
+    gives the paper's 0.125).  bound = saturation threshold (paper: 3.0).
+    """
+
+    cfg: FixedPointConfig
+    slope_shift: int = 3
+    bound: float = 3.0
+
+    @property
+    def bound_int(self) -> int:
+        return int(round(self.bound * (1 << self.cfg.frac_bits)))
+
+    @property
+    def half_int(self) -> int:  # 0.5 in (a,b)
+        return 1 << (self.cfg.frac_bits - 1)
+
+    @property
+    def one_int(self) -> int:  # 1.0 in (a,b)
+        return 1 << self.cfg.frac_bits
+
+
+def hs_star_int_arithmetic(x_int: Array, spec: HardSigmoidStarSpec) -> Array:
+    """``arithmetic`` method: truncating shift + add, then saturation selects.
+
+    The linear segment is clamped to [0, 1] so configurations whose
+    slope*bound exceeds 0.5 stay monotone (hardware output saturation)."""
+    x_int = x_int.astype(jnp.int32)
+    lin = trunc_shift_right(x_int, spec.slope_shift) + spec.half_int
+    lin = jnp.clip(lin, 0, spec.one_int)
+    y = jnp.where(x_int < -spec.bound_int, 0,
+                  jnp.where(x_int >= spec.bound_int, spec.one_int, lin))
+    return saturate(y, spec.cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _full_table_np(spec: HardSigmoidStarSpec) -> np.ndarray:
+    """Output code for every representable input code (host-side, cached)."""
+    xs = np.arange(spec.cfg.int_min, spec.cfg.int_max + 1, dtype=np.int32)
+    lin = np.clip((xs >> spec.slope_shift) + spec.half_int, 0, spec.one_int)
+    y = np.where(xs < -spec.bound_int, 0,
+                 np.where(xs >= spec.bound_int, spec.one_int, lin))
+    return np.clip(y, spec.cfg.int_min, spec.cfg.int_max).astype(np.int32)
+
+
+def one_to_one_table(spec: HardSigmoidStarSpec) -> np.ndarray:
+    """The ``1to1`` LUT over all 2**b inputs (saturated regions folded in)."""
+    return _full_table_np(spec)
+
+
+def num_1to1_entries(spec: HardSigmoidStarSpec) -> int:
+    """Number of *non-trivial* LUT entries the FPGA must store (the linear
+    region); the paper reports 96 for (4,8)."""
+    return 2 * spec.bound_int  # inputs in [-bound, bound)
+
+
+def step_table(spec: HardSigmoidStarSpec) -> Tuple[np.ndarray, np.ndarray]:
+    """The ``step`` method's merged table.
+
+    Returns (thresholds, outputs): ``y(x) = outputs[sum(x >= thresholds)]``.
+    len(outputs) is the paper's "entry count" — 14 for (4,8).
+    """
+    table = _full_table_np(spec)
+    xs = np.arange(spec.cfg.int_min, spec.cfg.int_max + 1, dtype=np.int32)
+    change = np.nonzero(np.diff(table))[0] + 1  # indices where output changes
+    thresholds = xs[change]
+    outputs = np.concatenate([table[:1], table[change]])
+    return thresholds.astype(np.int32), outputs.astype(np.int32)
+
+
+def num_step_entries(spec: HardSigmoidStarSpec) -> int:
+    _, outputs = step_table(spec)
+    return len(outputs)
+
+
+def hs_star_int_1to1(x_int: Array, spec: HardSigmoidStarSpec) -> Array:
+    table = jnp.asarray(one_to_one_table(spec))
+    idx = (x_int.astype(jnp.int32) - spec.cfg.int_min).astype(jnp.int32)
+    return jnp.take(table, idx, axis=0)
+
+
+def hs_star_int_step(x_int: Array, spec: HardSigmoidStarSpec) -> Array:
+    thresholds, outputs = step_table(spec)
+    thresholds = jnp.asarray(thresholds)
+    outputs = jnp.asarray(outputs)
+    x = x_int.astype(jnp.int32)
+    # sum of comparators == the FPGA's cascaded-comparator mux.
+    idx = jnp.sum(x[..., None] >= thresholds, axis=-1)
+    return jnp.take(outputs, idx, axis=0)
+
+
+def hs_star_int(x_int: Array, spec: HardSigmoidStarSpec, method: str = "arithmetic") -> Array:
+    if method == "arithmetic":
+        return hs_star_int_arithmetic(x_int, spec)
+    if method == "1to1":
+        return hs_star_int_1to1(x_int, spec)
+    if method == "step":
+        return hs_star_int_step(x_int, spec)
+    raise ValueError(f"unknown HardSigmoid* method {method!r}; "
+                     f"expected one of {HARDSIGMOID_METHODS}")
+
+
+# ---------------------------------------------------------------------------
+# Integer domain — HardTanh
+# ---------------------------------------------------------------------------
+
+def hard_tanh_int(x_int: Array, cfg: FixedPointConfig,
+                  min_val: float = -1.0, max_val: float = 1.0) -> Array:
+    """Two fixed-point comparators (5 LUTs on the FPGA; 2 selects on the VPU)."""
+    # Host-side threshold computation (round half up, saturate) so this is
+    # trace-safe under jit/scan.
+    def _q(v: float) -> int:
+        code = int(np.floor(v * (1 << cfg.frac_bits) + 0.5))
+        return int(np.clip(code, cfg.int_min, cfg.int_max))
+
+    return jnp.clip(x_int.astype(jnp.int32), _q(min_val), _q(max_val))
+
+
+# ---------------------------------------------------------------------------
+# Integer domain — baseline [15]: 256-entry LUT Sigmoid / Tanh
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _lut_act_table_np(kind: str, cfg: FixedPointConfig) -> np.ndarray:
+    xs = np.arange(cfg.int_min, cfg.int_max + 1, dtype=np.int32)
+    xf = xs.astype(np.float64) * cfg.scale
+    if kind == "sigmoid":
+        yf = 1.0 / (1.0 + np.exp(-xf))
+    elif kind == "tanh":
+        yf = np.tanh(xf)
+    else:
+        raise ValueError(kind)
+    y = np.floor(yf * (1 << cfg.frac_bits) + 0.5).astype(np.int32)
+    return np.clip(y, cfg.int_min, cfg.int_max)
+
+
+def lut_sigmoid_int(x_int: Array, cfg: FixedPointConfig) -> Array:
+    """Baseline [15]: full-table sigmoid (2**b entries; 256 for b=8)."""
+    table = jnp.asarray(_lut_act_table_np("sigmoid", cfg))
+    return jnp.take(table, x_int.astype(jnp.int32) - cfg.int_min, axis=0)
+
+
+def lut_tanh_int(x_int: Array, cfg: FixedPointConfig) -> Array:
+    table = jnp.asarray(_lut_act_table_np("tanh", cfg))
+    return jnp.take(table, x_int.astype(jnp.int32) - cfg.int_min, axis=0)

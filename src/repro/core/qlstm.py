@@ -1,0 +1,338 @@
+"""The paper's model: quantised LSTM (+ dense head) with three datapaths.
+
+  1. ``forward_float``   — float training/eval path; activation functions are
+     selectable (exact Sigmoid/Tanh, the baseline's 256-entry LUT semantics,
+     or the paper's HardSigmoid*/HardTanh).
+  2. ``forward_qat``     — float path with straight-through fake-quant
+     inserted at every point the hardware rounds (Quantisation-Aware
+     Training, §6.1 of the paper).
+  3. ``forward_int``     — bit-exact integer simulation of the accelerator
+     datapath.  ``alu_mode="pipelined"`` is the paper's 5-stage ALU with
+     LATE rounding (stage S5: accumulate wide, round once);
+     ``alu_mode="per_step"`` is Algorithm 1 as printed (round every product
+     back to (a,b) — the baseline [15] datapath).
+
+``forward_int`` is the oracle the Pallas kernel
+(`kernels/qlstm_cell.py`) must match bit-exactly.
+
+Model structure (paper §3/§5.3): ``num_layers`` LSTM layers (hidden size K)
+followed by one dense layer K -> P.  Gate order is [i, f, g, o].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core import hard_act
+from repro.core.fixed_point import FixedPointConfig, FXP_4_8
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationConfig:
+    """Which activation implementations the cell uses (paper §4.2)."""
+
+    gate: str = "hard_sigmoid_star"   # sigmoid | lut_sigmoid | hard_sigmoid_star
+    cell: str = "hard_tanh"           # tanh | lut_tanh | hard_tanh
+    hs_method: str = "step"           # arithmetic | 1to1 | step (integer path)
+    hs_slope_shift: int = 3           # slope = 2**-3 = 0.125
+    hs_bound: float = 3.0
+    ht_min: float = -1.0
+    ht_max: float = 1.0
+
+    def hs_spec(self, cfg: FixedPointConfig) -> hard_act.HardSigmoidStarSpec:
+        return hard_act.HardSigmoidStarSpec(cfg, self.hs_slope_shift, self.hs_bound)
+
+
+PAPER_ACTS = ActivationConfig()
+BASELINE_ACTS = ActivationConfig(gate="lut_sigmoid", cell="lut_tanh")
+FLOAT_ACTS = ActivationConfig(gate="sigmoid", cell="tanh")
+
+
+@dataclasses.dataclass(frozen=True)
+class QLSTMConfig:
+    """The paper's Table-2 functional meta-parameters."""
+
+    input_size: int = 1           # M
+    hidden_size: int = 20         # K
+    num_layers: int = 1
+    out_features: int = 1         # P
+    seq_len: int = 6              # N (PeMS-4W window used by [15])
+    acts: ActivationConfig = PAPER_ACTS
+    fxp: FixedPointConfig = FXP_4_8
+    alu_mode: str = "pipelined"   # pipelined (late rounding) | per_step
+
+    def layer_in_dim(self, layer: int) -> int:
+        return self.input_size if layer == 0 else self.hidden_size
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / quantisation
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: QLSTMConfig, key: Array, dtype=jnp.float32) -> Params:
+    layers = []
+    for li in range(cfg.num_layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        m, h = cfg.layer_in_dim(li), cfg.hidden_size
+        s = 1.0 / jnp.sqrt(h)
+        b = jnp.zeros((4 * h,), dtype)
+        # forget-gate bias init at 1.0 (standard LSTM practice)
+        b = b.at[h:2 * h].set(1.0)
+        layers.append({
+            "w_x": jax.random.uniform(k1, (m, 4 * h), dtype, -s, s),
+            "w_h": jax.random.uniform(k2, (h, 4 * h), dtype, -s, s),
+            "b": b,
+        })
+    key, kd = jax.random.split(key)
+    s = 1.0 / jnp.sqrt(cfg.hidden_size)
+    dense = {
+        "w": jax.random.uniform(kd, (cfg.hidden_size, cfg.out_features), dtype, -s, s),
+        "b": jnp.zeros((cfg.out_features,), dtype),
+    }
+    return {"layers": layers, "dense": dense}
+
+
+def quantize_params(params: Params, cfg: QLSTMConfig) -> Params:
+    """Float master weights -> integer codes for the hardware datapath.
+
+    Weights are stored in (a,b); biases at the wide PRODUCT format (2a frac
+    bits) so they add into the accumulator before the single late rounding —
+    exactly what the accelerator's bias registers hold."""
+    c = cfg.fxp
+    wide = fxp.product_config(c, c)
+
+    def q_layer(p):
+        return {
+            "w_x": fxp.quantize(p["w_x"], c),
+            "w_h": fxp.quantize(p["w_h"], c),
+            "b": fxp.quantize(p["b"], wide),
+        }
+
+    return {
+        "layers": [q_layer(p) for p in params["layers"]],
+        "dense": {
+            "w": fxp.quantize(params["dense"]["w"], c),
+            "b": fxp.quantize(params["dense"]["b"], wide),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Float / QAT forward
+# ---------------------------------------------------------------------------
+
+def _float_gate_act(acts: ActivationConfig, cfg: FixedPointConfig,
+                    fq: bool = False):
+    if acts.gate == "sigmoid":
+        return jax.nn.sigmoid
+    if acts.gate == "lut_sigmoid":
+        # float semantics of the baseline LUT == exact sigmoid (the LUT is
+        # its quantisation); QAT handles the rounding.
+        return jax.nn.sigmoid
+    if acts.gate == "hard_sigmoid_star":
+        slope = 2.0 ** (-acts.hs_slope_shift)
+        if not fq:
+            return lambda x: hard_act.hard_sigmoid_star(x, slope, acts.hs_bound)
+
+        # QAT: simulate the hardware's TRUNCATING shift (x_int >> k) with a
+        # straight-through floor, so training sees the exact deployment
+        # nonlinearity (the ElasticAI-Creator behaviour the paper trains
+        # with).  y = (floor(x_int / 2^k) + half) * 2^-a.
+        def tq_gate(x):
+            sf = float(1 << cfg.frac_bits)
+            x_int = x * sf  # fake_quant already snapped x to the grid
+            lin_i = jnp.floor(x_int * slope)
+            lin_i = x_int * slope + jax.lax.stop_gradient(lin_i - x_int * slope)
+            y = (lin_i + (1 << (cfg.frac_bits - 1))) / sf
+            return jnp.where(x < -acts.hs_bound, 0.0,
+                             jnp.where(x >= acts.hs_bound, 1.0, y))
+
+        return tq_gate
+    raise ValueError(acts.gate)
+
+
+def _float_cell_act(acts: ActivationConfig):
+    if acts.cell in ("tanh", "lut_tanh"):
+        return jnp.tanh
+    if acts.cell == "hard_tanh":
+        return lambda x: hard_act.hard_tanh(x, acts.ht_min, acts.ht_max)
+    raise ValueError(acts.cell)
+
+
+def _cell_step_float(p, x_t, h, c, cfg: QLSTMConfig, fq: bool):
+    """One LSTM cell step.  fq=True inserts STE fake-quant at every hardware
+    rounding point (QAT)."""
+    fp = cfg.fxp
+    q = (lambda t: fxp.fake_quant(t, fp)) if fq else (lambda t: t)
+    gate = _float_gate_act(cfg.acts, fp, fq=fq)
+    cellact = _float_cell_act(cfg.acts)
+
+    w_x = q(p["w_x"])
+    w_h = q(p["w_h"])
+    pre = x_t @ w_x + h @ w_h + p["b"]
+    pre = q(pre)  # the MAC's single late rounding (S5)
+    h4 = cfg.hidden_size
+    i, f, g, o = jnp.split(pre, 4, axis=-1)
+    i, f, o = gate(i), gate(f), gate(o)
+    g = cellact(g)
+    if fq:
+        i, f, g, o = map(q, (i, f, g, o))
+    c_new = q(f * c + i * g)
+    h_new = q(o * cellact(c_new))
+    return h_new, c_new
+
+
+def _forward(params: Params, x: Array, cfg: QLSTMConfig, fq: bool):
+    """x: (batch, seq, input_size) -> (batch, out_features)."""
+    b = x.shape[0]
+    h_t = x
+    for li, p in enumerate(params["layers"]):
+        h0 = jnp.zeros((b, cfg.hidden_size), x.dtype)
+        c0 = jnp.zeros((b, cfg.hidden_size), x.dtype)
+
+        def step(carry, x_t, p=p):
+            h, c = carry
+            h, c = _cell_step_float(p, x_t, h, c, cfg, fq)
+            return (h, c), h
+
+        (h_last, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(h_t, 0, 1))
+        h_t = jnp.swapaxes(hs, 0, 1)
+    q = (lambda t: fxp.fake_quant(t, cfg.fxp)) if fq else (lambda t: t)
+    dw = q(params["dense"]["w"])
+    y = h_last @ dw + params["dense"]["b"]
+    return q(y)
+
+
+def forward_float(params: Params, x: Array, cfg: QLSTMConfig) -> Array:
+    return _forward(params, x, cfg, fq=False)
+
+
+def forward_qat(params: Params, x: Array, cfg: QLSTMConfig) -> Array:
+    return _forward(params, x, cfg, fq=True)
+
+
+# ---------------------------------------------------------------------------
+# Integer forward — the hardware oracle
+# ---------------------------------------------------------------------------
+
+def _int_gate_act(x_int, cfg: QLSTMConfig):
+    fp = cfg.fxp
+    if cfg.acts.gate == "hard_sigmoid_star":
+        return hard_act.hs_star_int(x_int, cfg.acts.hs_spec(fp), cfg.acts.hs_method)
+    if cfg.acts.gate in ("lut_sigmoid", "sigmoid"):
+        return hard_act.lut_sigmoid_int(x_int, fp)
+    raise ValueError(cfg.acts.gate)
+
+
+def _int_cell_act(x_int, cfg: QLSTMConfig):
+    fp = cfg.fxp
+    if cfg.acts.cell == "hard_tanh":
+        return hard_act.hard_tanh_int(x_int, fp, cfg.acts.ht_min, cfg.acts.ht_max)
+    if cfg.acts.cell in ("lut_tanh", "tanh"):
+        return hard_act.lut_tanh_int(x_int, fp)
+    raise ValueError(cfg.acts.cell)
+
+
+def _int_mac(x_int, w_int, b_wide, cfg: QLSTMConfig):
+    """Gate pre-activation MAC, by ALU mode (C3)."""
+    fp = cfg.fxp
+    if cfg.alu_mode == "pipelined":
+        return fxp.fxp_matvec_late_rounding(x_int, w_int, b_wide, fp)
+    # per_step: Algorithm 1 as printed — round each product, saturating adds.
+    acc = _per_step_matvec(x_int, w_int, cfg)
+    prod = fxp.product_config(fp, fp)
+    b8 = fxp.requantize(b_wide.astype(jnp.int32), prod, fp)
+    return fxp.saturate(acc + b8, fp)
+
+
+def _per_step_matvec(x_int, w_int, cfg: QLSTMConfig):
+    """(..., K) x (K, N) with per-product rounding and a saturating (a,b)
+    accumulator — the non-pipelined baseline MAC."""
+    fp = cfg.fxp
+    prod = fxp.product_config(fp, fp)
+
+    def body(acc, kw):
+        xk, wk = kw  # xk: (..., 1), wk: (N,)
+        m = xk.astype(jnp.int32) * wk.astype(jnp.int32)[None, :]
+        m8 = fxp.requantize(m, prod, fp)
+        return fxp.saturate(acc + m8, fp), None
+
+    xs = jnp.moveaxis(x_int.astype(jnp.int32)[..., None], -2, 0)  # (K, ..., 1)
+    ws = w_int.astype(jnp.int32)  # (K, N)
+    acc0 = jnp.zeros(x_int.shape[:-1] + (w_int.shape[-1],), jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, (xs, ws))
+    return acc
+
+
+def _elem_mul_round(a_int, b_int, cfg: QLSTMConfig):
+    fp = cfg.fxp
+    prod = fxp.product_config(fp, fp)
+    return fxp.requantize(a_int.astype(jnp.int32) * b_int.astype(jnp.int32), prod, fp)
+
+
+def _cell_step_int(p, x_t, h, c, cfg: QLSTMConfig):
+    fp = cfg.fxp
+    prod = fxp.product_config(fp, fp)
+    pre = _int_mac(jnp.concatenate([x_t, h], axis=-1),
+                   jnp.concatenate([p["w_x"], p["w_h"]], axis=-2),
+                   p["b"], cfg)
+    i, f, g, o = jnp.split(pre, 4, axis=-1)
+    i = _int_gate_act(i, cfg)
+    f = _int_gate_act(f, cfg)
+    o = _int_gate_act(o, cfg)
+    g = _int_cell_act(g, cfg)
+    # c = f*c + i*g : both products at wide precision, add, round ONCE (S5).
+    wide = f.astype(jnp.int32) * c.astype(jnp.int32) + \
+        i.astype(jnp.int32) * g.astype(jnp.int32)
+    c_new = fxp.requantize(wide, prod, fp)
+    h_new = _elem_mul_round(o, _int_cell_act(c_new, cfg), cfg)
+    return h_new, c_new
+
+
+def forward_int(qparams: Params, x_int: Array, cfg: QLSTMConfig) -> Array:
+    """Bit-exact accelerator datapath.
+
+    x_int: (batch, seq, input_size) integer codes in cfg.fxp.
+    Returns integer codes (batch, out_features) in cfg.fxp.
+    """
+    b = x_int.shape[0]
+    h_t = x_int.astype(jnp.int32)
+    for p in qparams["layers"]:
+        h0 = jnp.zeros((b, cfg.hidden_size), jnp.int32)
+        c0 = jnp.zeros((b, cfg.hidden_size), jnp.int32)
+
+        def step(carry, x_t, p=p):
+            h, c = carry
+            h, c = _cell_step_int(p, x_t, h, c, cfg)
+            return (h, c), h
+
+        (h_last, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(h_t, 0, 1))
+        h_t = jnp.swapaxes(hs, 0, 1)
+    return _int_mac(h_last, qparams["dense"]["w"], qparams["dense"]["b"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Operation counting (paper's GOP accounting, §4 Eq. 7)
+# ---------------------------------------------------------------------------
+
+def ops_per_inference(cfg: QLSTMConfig) -> int:
+    """Equivalent operations per inference (multiply+add each count as 1 op,
+    so a MAC is 2 ops) — the convention behind the paper's GOP/s numbers."""
+    total = 0
+    for li in range(cfg.num_layers):
+        m, h = cfg.layer_in_dim(li), cfg.hidden_size
+        per_step = 2 * 4 * h * (m + h)   # gate MACs
+        per_step += 4 * h                # + bias adds
+        per_step += 2 * 3 * h + h        # f*c, i*g, o*tanh(c) muls + one add
+        per_step += 4 * h                # activations (1 op each)
+        total += cfg.seq_len * per_step
+    total += 2 * cfg.hidden_size * cfg.out_features + cfg.out_features
+    return total

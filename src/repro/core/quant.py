@@ -1,0 +1,163 @@
+"""Tensor-level int8 quantisation — the paper's C1 generalised to LM scale.
+
+The paper quantises a whole LSTM datapath to (4,8) fixed point with
+power-of-two scales so that requantisation is a shift.  Scaled up to the
+assigned LM architectures this becomes:
+
+  * W8A8 symmetric int8 matmuls with int32 accumulation (MXU-native),
+  * per-channel (weights) / per-tensor (activations) scales,
+  * optional POWER-OF-TWO scales (`p2=True`) — the paper-faithful mode in
+    which every requantisation lowers to a shift,
+  * int8 KV-cache quantisation for decode (C1 beyond the paper),
+  * straight-through fake-quant for QAT.
+
+These utilities are pure jnp; the Pallas kernel (`kernels/quant_matmul.py`)
+implements the same semantics with explicit VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+INT8_QMAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantisation policy for a module / the whole model.
+
+    mode:
+      "none"  — full precision.
+      "w8"    — weight-only int8 (decode-friendly; halves/quarters HBM traffic).
+      "w8a8"  — weights and activations int8; matmuls run on the int8 MXU path.
+    p2_scale: round scales to powers of two (paper-faithful; requant = shift).
+    per_channel: per-output-channel weight scales.
+    quantize_kv: int8 KV cache (decode shapes).
+    """
+
+    mode: str = "none"
+    p2_scale: bool = True
+    per_channel: bool = True
+    quantize_kv: bool = False
+    stochastic: bool = False  # placeholder for stochastic rounding on TPU
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    @property
+    def act_quant(self) -> bool:
+        return self.mode == "w8a8"
+
+
+NO_QUANT = QuantConfig("none")
+W8 = QuantConfig("w8")
+W8A8 = QuantConfig("w8a8")
+
+
+class QTensor(NamedTuple):
+    """A symmetric-quantised tensor: values * scale ≈ original."""
+
+    values: Array  # int8
+    scale: Array   # f32, broadcastable against values
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self) -> Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def _p2_round_scale(scale: Array) -> Array:
+    """Round a positive scale UP to the next power of two (never clips)."""
+    return jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(scale, 1e-30))))
+
+
+def compute_scale(x: Array, axis: Optional[Sequence[int]] = None,
+                  p2: bool = True, qmax: float = INT8_QMAX) -> Array:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    return _p2_round_scale(scale) if p2 else scale
+
+
+def quantize_tensor(x: Array, axis: Optional[Sequence[int]] = None,
+                    p2: bool = True) -> QTensor:
+    """Symmetric int8 quantisation. ``axis`` = reduction axes for the scale
+    (None -> per-tensor). Round-half-up, saturating — same conventions as
+    ``core.fixed_point``."""
+    scale = compute_scale(x, axis=axis, p2=p2)
+    v = jnp.clip(jnp.floor(x / scale + 0.5), -128, 127).astype(jnp.int8)
+    return QTensor(v, scale.astype(jnp.float32))
+
+
+def quantize_weight(w: Array, cfg: QuantConfig, out_axis: int = -1) -> QTensor:
+    """Per-output-channel (or per-tensor) weight quantisation."""
+    if cfg.per_channel:
+        axes = tuple(i for i in range(w.ndim) if i != (out_axis % w.ndim))
+        return quantize_tensor(w, axis=axes, p2=cfg.p2_scale)
+    return quantize_tensor(w, axis=None, p2=cfg.p2_scale)
+
+
+def fake_quant_tensor(x: Array, axis: Optional[Sequence[int]] = None,
+                      p2: bool = True) -> Array:
+    """STE fake quantisation for QAT: forward = dequant(quant(x)),
+    backward = identity (with saturation clipping)."""
+    scale = jax.lax.stop_gradient(compute_scale(x, axis=axis, p2=p2))
+    q = jnp.clip(jnp.floor(x / scale + 0.5), -128, 127) * scale
+    xc = jnp.clip(x, -128.0 * scale, 127.0 * scale)
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+# ---------------------------------------------------------------------------
+# Quantised matmul (pure-jnp semantics; Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+def qmatmul(x: Array, wq: QTensor, cfg: QuantConfig) -> Array:
+    """x @ w with the paper's datapath, by mode.
+
+    w8a8: quantise x per-tensor, int8xint8 -> int32 accumulate (late
+          rounding, C3), dequantise once at the end.
+    w8:   dequantise weights into the matmul (weight-only compression).
+    """
+    if cfg.mode == "w8a8":
+        xq = quantize_tensor(x, axis=None, p2=cfg.p2_scale)
+        acc = jax.lax.dot_general(
+            xq.values.astype(jnp.int32), wq.values.astype(jnp.int32),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * (xq.scale * wq.scale)
+    # w8: float matmul against dequantised weights
+    return jnp.dot(x, wq.dequantize().astype(x.dtype))
+
+
+def fq_matmul(x: Array, w: Array, cfg: QuantConfig) -> Array:
+    """QAT-time matmul: fake-quantise weights (and activations for w8a8),
+    compute in float.  Differentiable; converges to the integer semantics."""
+    if not cfg.enabled:
+        return jnp.dot(x, w)
+    wf = fake_quant_tensor(w, axis=tuple(range(w.ndim - 1)), p2=cfg.p2_scale) \
+        if cfg.per_channel else fake_quant_tensor(w, p2=cfg.p2_scale)
+    xf = fake_quant_tensor(x, p2=cfg.p2_scale) if cfg.act_quant else x
+    return jnp.dot(xf, wf.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantisation (C1 applied to decode memory traffic)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(kv: Array) -> QTensor:
+    """Per-head int8 KV quantisation: reduce over every axis except heads
+    (assumed axis -2: [..., seq, heads, head_dim] -> per-head scale)."""
+    axes = tuple(i for i in range(kv.ndim) if i != kv.ndim - 2)
+    return quantize_tensor(kv, axis=axes, p2=True)
+
+
+def dequantize_kv(kvq: QTensor, dtype=jnp.bfloat16) -> Array:
+    return kvq.dequantize().astype(dtype)

@@ -1,0 +1,3 @@
+from repro.data.timeseries import pems_like_dataset  # noqa: F401
+from repro.data.lm_data import SyntheticLM  # noqa: F401
+from repro.data.pipeline import Pipeline  # noqa: F401

@@ -1,0 +1,123 @@
+"""Pallas flash-attention kernel — the C3 pipeline philosophy applied to
+the LM archs' dominant prefill hot-spot.
+
+Grid (batch*heads, q_blocks, kv_blocks) with the kv axis minor: the online-
+softmax state (m, l, acc) lives in VMEM scratch across kv steps — exactly
+the qlstm kernel's accumulate-wide/round-once structure, with softmax
+renormalisation in place of the fixed-point requant.  The Pallas pipeline
+double-buffers the next (k, v) tiles' HBM→VMEM DMA behind the current
+block's MXU matmuls.
+
+Causality: kv blocks strictly above the diagonal are skipped with
+``pl.when`` (compute suppressed; DMA still pipelined — on TPU the fetch
+overlaps the previous block's compute, so skipped blocks cost ~0 MXU time).
+
+Oracle: ``kernels/ref.py::attention_ref`` (fp32 softmax attention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _make_kernel(bq: int, bk: int, hd: int, scale: float, causal: bool,
+                 window: Optional[int], s_valid: int):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        kj = pl.program_id(2)
+        qi = pl.program_id(1)
+
+        @pl.when(kj == 0)
+        def _():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        def compute():
+            q = q_ref[0].astype(jnp.float32)      # (bq, hd)
+            k = k_ref[0].astype(jnp.float32)      # (bk, hd)
+            v = v_ref[0].astype(jnp.float32)
+            sc = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale  # (bq, bk)
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = kpos < s_valid   # padded kv columns are invalid
+            if causal:
+                mask = mask & (kpos <= qpos)
+            if window is not None:
+                mask = mask & ((qpos - kpos) < window)
+            sc = jnp.where(mask, sc, NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, sc.max(-1))
+            p = jnp.exp(sc - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + p.sum(-1)
+            acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        if causal:
+            # skip blocks strictly above the diagonal
+            pl.when(kj * bk <= qi * bq + (bq - 1))(compute)
+        else:
+            compute()
+
+        @pl.when(kj == pl.num_programs(2) - 1)
+        def _():
+            l = jnp.maximum(l_ref[...], 1e-30)
+            o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_pallas(q: Array, k: Array, v: Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> Array:
+    """q: (BH, T, hd), k/v: (BH, S, hd) -> (BH, T, hd).
+
+    Head grouping (GQA) is the caller's job (see ops.mha_flash)."""
+    bh, t, hd = q.shape
+    s = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    bq, bk = min(block_q, t), min(block_k, s)
+    tp, sp = -t % bq, -s % bk
+    if tp:
+        q = jnp.pad(q, ((0, 0), (0, tp), (0, 0)))
+    if sp:  # padded kv columns are masked inside the kernel (kpos < s)
+        k = jnp.pad(k, ((0, 0), (0, sp), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp), (0, 0)))
+    nq, nk = (t + tp) // bq, (s + sp) // bk
+    out = pl.pallas_call(
+        _make_kernel(bq, bk, hd, scale, causal, window, s),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t + tp, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :t]

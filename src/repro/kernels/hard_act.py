@@ -1,0 +1,130 @@
+"""Elementwise hard-activation kernel — C2's three HardSigmoid* methods as
+VPU lowerings, plus HardTanh.
+
+methods:
+  arithmetic — truncating shift + add, two saturation selects (the paper's
+               two-sequential-ops datapath).
+  step       — unrolled compile-time comparator cascade (the 14-entry merged
+               LUT); pure selects, no gather.
+  1to1       — full-table gather.  Supported in interpret mode and on TPU via
+               one-hot matmul contraction; on real TPUs a 256-wide gather per
+               element is VPU-hostile — which is this hardware's version of
+               the paper's finding that the best method depends on the
+               configuration (Table 1; see benchmarks/bench_activations.py).
+
+Oracle: ``kernels/ref.py::hard_act_ref`` (bit-exact for every method).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hard_act
+from repro.core.fixed_point import FixedPointConfig
+
+Array = jax.Array
+
+
+def _make_kernel(cfg: FixedPointConfig, method: str, slope_shift: int,
+                 bound: float):
+    spec = hard_act.HardSigmoidStarSpec(cfg, slope_shift, bound)
+
+    def body(x):
+        x = x.astype(jnp.int32)
+        if method == "arithmetic":
+            lin = jnp.clip((x >> spec.slope_shift) + spec.half_int,
+                           0, spec.one_int)
+            y = jnp.where(x < -spec.bound_int, 0,
+                          jnp.where(x >= spec.bound_int, spec.one_int, lin))
+            return jnp.clip(y, cfg.int_min, cfg.int_max)
+        if method == "step":
+            thresholds, outputs = hard_act.step_table(spec)
+            y = jnp.full_like(x, int(outputs[0]))
+            for thr, prev, nxt in zip(thresholds, outputs[:-1], outputs[1:]):
+                y = y + jnp.where(x >= int(thr), int(nxt) - int(prev), 0)
+            return y
+        raise ValueError(method)
+
+    if method == "1to1":
+        # The table is a kernel INPUT (VMEM-resident across grid steps);
+        # lookup via one-hot matmul contraction — the TPU-safe gather.
+        def kernel(x_ref, t_ref, o_ref):
+            x = x_ref[...].astype(jnp.int32)
+            idx = x - cfg.int_min
+            n = t_ref.shape[-1]
+            onehot = (idx[..., None] == jax.lax.broadcasted_iota(
+                jnp.int32, idx.shape + (n,), idx.ndim)).astype(jnp.int32)
+            o_ref[...] = jnp.sum(onehot * t_ref[...][0], axis=-1).astype(o_ref.dtype)
+        return kernel
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = body(x_ref[...]).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "method", "slope_shift", "bound", "block",
+                     "interpret"))
+def hard_sigmoid_star_pallas(x_int: Array, *, cfg: FixedPointConfig,
+                             method: str = "arithmetic",
+                             slope_shift: int = 3, bound: float = 3.0,
+                             block: int = 1024,
+                             interpret: bool = True) -> Array:
+    """x_int: (rows, cols) integer codes -> codes (same dtype)."""
+    rows, cols = x_int.shape
+    brows = min(block, rows)
+    pad = (-rows) % brows
+    if pad:
+        x_int = jnp.pad(x_int, ((0, pad), (0, 0)))
+    in_specs = [pl.BlockSpec((brows, cols), lambda i: (i, 0))]
+    args = [x_int]
+    if method == "1to1":
+        spec = hard_act.HardSigmoidStarSpec(cfg, slope_shift, bound)
+        table = jnp.asarray(hard_act.one_to_one_table(spec)).reshape(1, -1)
+        in_specs.append(pl.BlockSpec(table.shape, lambda i: (0, 0)))
+        args.append(table)
+    out = pl.pallas_call(
+        _make_kernel(cfg, method, slope_shift, bound),
+        grid=((rows + pad) // brows,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((brows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), x_int.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:rows]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "min_val", "max_val",
+                                             "block", "interpret"))
+def hard_tanh_pallas(x_int: Array, *, cfg: FixedPointConfig,
+                     min_val: float = -1.0, max_val: float = 1.0,
+                     block: int = 1024, interpret: bool = True) -> Array:
+    import numpy as np
+    lo = int(np.clip(np.floor(min_val * (1 << cfg.frac_bits) + 0.5),
+                     cfg.int_min, cfg.int_max))
+    hi = int(np.clip(np.floor(max_val * (1 << cfg.frac_bits) + 0.5),
+                     cfg.int_min, cfg.int_max))
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jnp.clip(x_ref[...].astype(jnp.int32), lo, hi).astype(o_ref.dtype)
+
+    rows, cols = x_int.shape
+    brows = min(block, rows)
+    pad = (-rows) % brows
+    if pad:
+        x_int = jnp.pad(x_int, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        kernel,
+        grid=((rows + pad) // brows,),
+        in_specs=[pl.BlockSpec((brows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((brows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, cols), x_int.dtype),
+        interpret=interpret,
+    )(x_int)
+    return out[:rows]

@@ -1,0 +1,128 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Dispatch policy: kernels run in ``interpret=True`` on CPU (bit-exact
+execution of the kernel body — the validation mode for this container) and
+compiled on TPU.  ``use_kernel=False`` falls back to the pure-jnp oracle,
+which is also what the multi-device pjit graphs use (Pallas kernels are
+per-core; under shard_map they'd run per shard — LSTM batch shards are
+embarrassingly parallel so both paths exist).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core.accelerator import AcceleratorConfig, plan
+from repro.core.fixed_point import FixedPointConfig
+from repro.core.qlstm import QLSTMConfig
+from repro.kernels import ref
+from repro.kernels.hard_act import hard_sigmoid_star_pallas, hard_tanh_pallas
+from repro.kernels.qlstm_cell import qlstm_seq_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qlstm_seq(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+              model: QLSTMConfig, accel: Optional[AcceleratorConfig] = None,
+              use_kernel: bool = True) -> Array:
+    """Time-major quantised LSTM layer: (T, B, M) codes -> (T, B, H) codes.
+
+    ``accel`` resolves the Table-2 meta-parameters (compute unit, weight
+    residency, HardSigmoid* method, pipelining)."""
+    accel = accel or AcceleratorConfig()
+    p = plan(model, accel)
+    acts = model.acts
+    if not use_kernel or not p["pipelined_alu"]:
+        # Oracle path (also the per_step baseline — no fused kernel exists
+        # for the non-pipelined ALU, faithfully to the paper's baseline).
+        return ref.qlstm_seq_ref(
+            x_int, w_x, w_h, b_wide, model.fxp,
+            hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
+            ht_min=acts.ht_min, ht_max=acts.ht_max)
+    return qlstm_seq_pallas(
+        x_int.astype(model.fxp.storage_dtype),
+        w_x.astype(model.fxp.storage_dtype),
+        w_h.astype(model.fxp.storage_dtype),
+        b_wide,
+        cfg=model.fxp,
+        hs_method=("arithmetic" if p["hs_method"] == "1to1" else p["hs_method"]),
+        hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
+        ht_min=acts.ht_min, ht_max=acts.ht_max,
+        compute_unit=p["compute_unit"],
+        interpret=_interpret()).astype(jnp.int32)
+
+
+def quant_matmul(x_int8: Array, w_int8: Array, use_kernel: bool = True,
+                 block=(128, 128, 128)) -> Array:
+    """(M,K) x (K,N) int8 -> int32 accumulator."""
+    if not use_kernel:
+        return ref.quant_matmul_ref(x_int8, w_int8)
+    return quant_matmul_pallas(x_int8, w_int8, out_mode="int32",
+                               block=block, interpret=_interpret())
+
+
+def quant_matmul_requant(x_int: Array, w_int: Array, cfg: FixedPointConfig,
+                         use_kernel: bool = True, block=(128, 128, 128)) -> Array:
+    """Fixed-point matmul with the fused S5 requantisation."""
+    if not use_kernel:
+        return ref.quant_matmul_requant_ref(x_int, w_int, cfg)
+    return quant_matmul_pallas(x_int, w_int, out_mode="requant", cfg=cfg,
+                               block=block, interpret=_interpret())
+
+
+def hard_sigmoid_star_int(x_int: Array, cfg: FixedPointConfig,
+                          method: str = "arithmetic", slope_shift: int = 3,
+                          bound: float = 3.0, use_kernel: bool = True) -> Array:
+    if not use_kernel:
+        return ref.hard_act_ref(x_int, cfg, method, slope_shift, bound)
+    shape = x_int.shape
+    x2 = x_int.reshape(-1, shape[-1]) if x_int.ndim != 2 else x_int
+    out = hard_sigmoid_star_pallas(x2, cfg=cfg, method=method,
+                                   slope_shift=slope_shift, bound=bound,
+                                   interpret=_interpret())
+    return out.reshape(shape)
+
+
+def hard_tanh_int(x_int: Array, cfg: FixedPointConfig, min_val: float = -1.0,
+                  max_val: float = 1.0, use_kernel: bool = True) -> Array:
+    if not use_kernel:
+        return ref.hard_tanh_ref(x_int, cfg, min_val, max_val)
+    shape = x_int.shape
+    x2 = x_int.reshape(-1, shape[-1]) if x_int.ndim != 2 else x_int
+    out = hard_tanh_pallas(x2, cfg=cfg, min_val=min_val, max_val=max_val,
+                           interpret=_interpret())
+    return out.reshape(shape)
+
+
+def mha_flash(q: Array, k: Array, v: Array, *, causal: bool = True,
+              window=None, scale=None, block_q: int = 128,
+              block_k: int = 128, use_kernel: bool = True) -> Array:
+    """Multi-head (GQA) wrapper over the Pallas flash-attention kernel.
+
+    q: (B, T, H, hd); k, v: (B, S, KV, hd) -> (B, T, H, hd)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    kr = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vr = jnp.repeat(v, g, axis=2) if g > 1 else v
+    q2 = q.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    k2 = kr.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    v2 = vr.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    if use_kernel:
+        o = flash_attention_pallas(q2, k2, v2, causal=causal, window=window,
+                                   scale=scale, block_q=block_q,
+                                   block_k=block_k, interpret=_interpret())
+    else:
+        o = ref.attention_ref(q2, k2, v2, causal=causal, window=window,
+                              scale=scale)
+    return o.reshape(b, h, t, hd).transpose(0, 2, 1, 3)

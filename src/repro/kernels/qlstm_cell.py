@@ -1,0 +1,164 @@
+"""Fused quantised-LSTM sequence kernel — the paper's pipelined ALU (C3)
+re-thought for the TPU memory hierarchy.
+
+FPGA design (paper §5.2)                 This kernel
+----------------------------------       ------------------------------------
+5-stage pipeline: load W[i],x[i] ∥       Pallas grid pipeline: HBM→VMEM DMA of
+  multiply ∥ accumulate                    x_{t+1} overlapped with step-t MXU/
+                                           VPU compute (double buffering).
+Weights in BRAM, no off-chip access      Weights fetched once into VMEM and
+                                           resident across all T grid steps
+                                           (constant index_map ⇒ no re-fetch).
+16-bit accumulator, round ONCE (S5)      int32 accumulator in VMEM scratch,
+                                           single round-half-up shift per MAC.
+ALU_resource_type = DSP | LUT            compute_unit = mxu (int8 systolic
+                                           matmul) | vpu (vector mul-reduce).
+HardSigmoid* methods                      arithmetic (shift+add+selects) and
+                                           step (unrolled comparator cascade);
+                                           both bit-identical to the oracle.
+
+Grid = (batch_blocks, T); T is the minor axis, so the (h, c) VMEM scratch
+carries state across timesteps of one batch block and resets at t == 0.
+
+Oracle: ``kernels/ref.py::qlstm_seq_ref`` (bit-exact).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hard_act
+from repro.core.fixed_point import FixedPointConfig, product_config
+
+Array = jax.Array
+
+
+def _hs_star_arith(x, spec: hard_act.HardSigmoidStarSpec):
+    lin = jnp.clip((x >> spec.slope_shift) + spec.half_int, 0, spec.one_int)
+    return jnp.where(x < -spec.bound_int, 0,
+                     jnp.where(x >= spec.bound_int, spec.one_int, lin))
+
+
+def _hs_star_step(x, spec: hard_act.HardSigmoidStarSpec):
+    # Compile-time constant comparator cascade — the FPGA 'step' LUT.
+    thresholds, outputs = hard_act.step_table(spec)
+    y = jnp.full_like(x, int(outputs[0]))
+    for thr, prev, nxt in zip(thresholds, outputs[:-1], outputs[1:]):
+        y = y + jnp.where(x >= int(thr), int(nxt) - int(prev), 0)
+    return y
+
+
+def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
+                 hs_slope_shift: int, hs_bound: float,
+                 ht_min: float, ht_max: float, compute_unit: str,
+                 t_len: int):
+    prod = product_config(cfg, cfg)
+    shift = prod.frac_bits - cfg.frac_bits          # 2a -> a
+    half = 1 << (shift - 1)
+    spec = hard_act.HardSigmoidStarSpec(cfg, hs_slope_shift, hs_bound)
+    lo = cfg.int_min
+    hi = cfg.int_max
+    ht_lo = int(max(cfg.int_min, round(ht_min * (1 << cfg.frac_bits))))
+    ht_hi = int(min(cfg.int_max, round(ht_max * (1 << cfg.frac_bits))))
+    hs = _hs_star_step if hs_method == "step" else _hs_star_arith
+
+    def requant(v):  # round-half-up shift + saturate: the single S5 rounding
+        return jnp.clip((v + half) >> shift, lo, hi)
+
+    def kernel(x_ref, wx_ref, wh_ref, b_ref, out_ref, h_ref, c_ref):
+        t = pl.program_id(1)
+
+        @pl.when(t == 0)
+        def _():
+            h_ref[...] = jnp.zeros_like(h_ref)
+            c_ref[...] = jnp.zeros_like(c_ref)
+
+        x_t = x_ref[0]                       # (bb, M) int carrier
+        h8 = h_ref[...].astype(x_t.dtype)    # stored codes fit the carrier
+        if compute_unit == "mxu":
+            # int8 x int8 -> int32 systolic matmul (the DSP analogue)
+            acc = jax.lax.dot_general(
+                x_t, wx_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc += jax.lax.dot_general(
+                h8, wh_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        else:
+            # VPU: broadcast multiply + reduce (the LUT-fabric analogue)
+            acc = jnp.sum(x_t.astype(jnp.int32)[:, :, None]
+                          * wx_ref[...].astype(jnp.int32)[None, :, :], axis=1)
+            acc += jnp.sum(h8.astype(jnp.int32)[:, :, None]
+                           * wh_ref[...].astype(jnp.int32)[None, :, :], axis=1)
+        acc += b_ref[...]                    # bias at accumulator precision
+        pre = requant(acc)                   # late rounding (S5)
+
+        i = hs(pre[:, :hdim], spec)
+        f = hs(pre[:, hdim:2 * hdim], spec)
+        g = jnp.clip(pre[:, 2 * hdim:3 * hdim], ht_lo, ht_hi)
+        o = hs(pre[:, 3 * hdim:], spec)
+
+        c = c_ref[...]
+        wide = f * c + i * g                 # both products wide, add, ...
+        c_new = requant(wide)                # ... round once
+        tanh_c = jnp.clip(c_new, ht_lo, ht_hi)
+        h_new = requant(o * tanh_c)
+
+        h_ref[...] = h_new
+        c_ref[...] = c_new
+        out_ref[0] = h_new.astype(out_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "hs_method", "hs_slope_shift", "hs_bound",
+                     "ht_min", "ht_max", "compute_unit", "batch_block",
+                     "interpret"))
+def qlstm_seq_pallas(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+                     *, cfg: FixedPointConfig,
+                     hs_method: str = "arithmetic",
+                     hs_slope_shift: int = 3, hs_bound: float = 3.0,
+                     ht_min: float = -1.0, ht_max: float = 1.0,
+                     compute_unit: str = "mxu",
+                     batch_block: Optional[int] = None,
+                     interpret: bool = True) -> Array:
+    """Run the fused kernel.
+
+    x_int: (T, B, M) integer codes (storage dtype of cfg);
+    w_x: (M, 4H); w_h: (H, 4H); b_wide: (4H,) int32.
+    Returns (T, B, H) codes in the storage dtype.
+    """
+    t_len, bsz, m = x_int.shape
+    hdim = w_h.shape[0]
+    bb = batch_block or min(bsz, 128)
+    pad = (-bsz) % bb
+    if pad:
+        x_int = jnp.pad(x_int, ((0, 0), (0, pad), (0, 0)))
+    bsz_p = bsz + pad
+    nb = bsz_p // bb
+
+    kernel = _make_kernel(cfg, hdim, hs_method, hs_slope_shift, hs_bound,
+                          ht_min, ht_max, compute_unit, t_len)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb, t_len),
+        in_specs=[
+            pl.BlockSpec((1, bb, m), lambda bi, t: (t, bi, 0)),
+            pl.BlockSpec((m, 4 * hdim), lambda bi, t: (0, 0)),      # resident
+            pl.BlockSpec((hdim, 4 * hdim), lambda bi, t: (0, 0)),   # resident
+            pl.BlockSpec((1, 4 * hdim), lambda bi, t: (0, 0)),      # resident
+        ],
+        out_specs=pl.BlockSpec((1, bb, hdim), lambda bi, t: (t, bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_len, bsz_p, hdim), x_int.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, hdim), jnp.int32),
+                        pltpu.VMEM((bb, hdim), jnp.int32)],
+        interpret=interpret,
+    )(x_int, w_x, w_h, b_wide.reshape(1, -1).astype(jnp.int32))
+    return out[:, :bsz]

@@ -1,0 +1,98 @@
+"""Tiled W8A8 matmul kernel — the paper's C1 (narrow integer arithmetic,
+late rounding) at LM scale.
+
+Pallas grid (M/bm, N/bn, K/bk), int8 tiles in VMEM, int32 accumulator in
+VMEM scratch across the K axis (the minor grid dim), and — exactly like the
+paper's pipeline stage S5 — the accumulator is requantised ONCE, after the
+final K step:
+
+  * ``out_mode="int32"``: raw accumulator (float scales applied outside —
+    the generic W8A8 path used by the LM layers).
+  * ``out_mode="requant"``: fused round-half-up shift back to (a,b) codes —
+    the paper-faithful fixed-point pipeline.
+
+The grid pipeline double-buffers the next (x, w) tiles' HBM→VMEM DMA behind
+the current MXU matmul: the TPU re-expression of load ∥ multiply ∥ accumulate.
+
+Oracle: ``kernels/ref.py::quant_matmul_ref`` / ``quant_matmul_requant_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fixed_point import FixedPointConfig, product_config
+
+Array = jax.Array
+
+
+def _make_kernel(out_mode: str, cfg: Optional[FixedPointConfig]):
+    if out_mode == "requant":
+        prod = product_config(cfg, cfg)
+        shift = prod.frac_bits - cfg.frac_bits
+        half = 1 << (shift - 1)
+        lo, hi = cfg.int_min, cfg.int_max
+
+    def kernel(x_ref, w_ref, o_ref, acc_ref):
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+        @pl.when(k == pl.num_programs(2) - 1)
+        def _():
+            acc = acc_ref[...]
+            if out_mode == "requant":
+                acc = jnp.clip((acc + half) >> shift, lo, hi)
+            o_ref[...] = acc.astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_mode", "cfg", "block", "interpret"))
+def quant_matmul_pallas(x: Array, w: Array, *,
+                        out_mode: str = "int32",
+                        cfg: Optional[FixedPointConfig] = None,
+                        block: Tuple[int, int, int] = (128, 128, 128),
+                        interpret: bool = True) -> Array:
+    """x: (M, K) int8, w: (K, N) int8 -> (M, N) int32 (or int8 codes when
+    out_mode='requant').  Dims are padded up to the block multiples; MXU
+    tiles want 128-multiples (DESIGN.md: MXU-fill is the DSP-occupancy
+    analogue)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    mp, np_, kp = m + pm, n + pn, k + pk
+
+    out_dtype = jnp.int32 if out_mode == "int32" else cfg.storage_dtype
+    out = pl.pallas_call(
+        _make_kernel(out_mode, cfg),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:m, :n]

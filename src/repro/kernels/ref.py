@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *bit-exact* specification its kernel must match
+(`tests/test_kernels.py` sweeps shapes/dtypes and asserts exact equality for
+integer paths / allclose for float paths).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core import hard_act
+from repro.core.fixed_point import FixedPointConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# qlstm_cell kernel oracle
+# ---------------------------------------------------------------------------
+
+def qlstm_seq_ref(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+                  cfg: FixedPointConfig,
+                  hs_slope_shift: int = 3, hs_bound: float = 3.0,
+                  ht_min: float = -1.0, ht_max: float = 1.0) -> Array:
+    """Time-major quantised LSTM sequence — the paper's pipelined datapath.
+
+    x_int:  (T, B, M) integer codes in cfg (int8 carrier ok).
+    w_x:    (M, 4H) codes; w_h: (H, 4H) codes; gate order [i, f, g, o].
+    b_wide: (4H,) codes at the PRODUCT precision (2a frac bits, int32).
+    Returns (T, B, H) int32 codes of every hidden state.
+    """
+    prod = fxp.product_config(cfg, cfg)
+    spec = hard_act.HardSigmoidStarSpec(cfg, hs_slope_shift, hs_bound)
+    t_len, bsz, _ = x_int.shape
+    hdim = w_h.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        acc = (x_t.astype(jnp.int32) @ w_x.astype(jnp.int32)
+               + h.astype(jnp.int32) @ w_h.astype(jnp.int32)
+               + b_wide.astype(jnp.int32))
+        pre = fxp.requantize(acc, prod, cfg)
+        i = hard_act.hs_star_int_arithmetic(pre[:, :hdim], spec)
+        f = hard_act.hs_star_int_arithmetic(pre[:, hdim:2 * hdim], spec)
+        g = hard_act.hard_tanh_int(pre[:, 2 * hdim:3 * hdim], cfg, ht_min, ht_max)
+        o = hard_act.hs_star_int_arithmetic(pre[:, 3 * hdim:], spec)
+        wide = f * c + i * g
+        c_new = fxp.requantize(wide, prod, cfg)
+        tanh_c = hard_act.hard_tanh_int(c_new, cfg, ht_min, ht_max)
+        h_new = fxp.requantize(o * tanh_c, prod, cfg)
+        return (h_new, c_new), h_new
+
+    h0 = jnp.zeros((bsz, hdim), jnp.int32)
+    c0 = jnp.zeros((bsz, hdim), jnp.int32)
+    (_, _), hs = jax.lax.scan(step, (h0, c0), x_int.astype(jnp.int32))
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul kernel oracle
+# ---------------------------------------------------------------------------
+
+def quant_matmul_ref(x: Array, w: Array) -> Array:
+    """int8 x int8 -> int32 full-precision accumulation (late rounding)."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def quant_matmul_requant_ref(x: Array, w: Array, cfg: FixedPointConfig) -> Array:
+    """Fixed-point mode: accumulate wide, single round-half-up shift back to
+    (a,b) — pipeline stage S5."""
+    prod = fxp.product_config(cfg, cfg)
+    return fxp.requantize(quant_matmul_ref(x, w), prod, cfg)
+
+
+# ---------------------------------------------------------------------------
+# hard_act kernel oracle
+# ---------------------------------------------------------------------------
+
+def hard_act_ref(x_int: Array, cfg: FixedPointConfig, method: str = "arithmetic",
+                 slope_shift: int = 3, bound: float = 3.0) -> Array:
+    spec = hard_act.HardSigmoidStarSpec(cfg, slope_shift, bound)
+    return hard_act.hs_star_int(x_int, spec, method)
+
+
+def hard_tanh_ref(x_int: Array, cfg: FixedPointConfig,
+                  min_val: float = -1.0, max_val: float = 1.0) -> Array:
+    return hard_act.hard_tanh_int(x_int, cfg, min_val, max_val)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention kernel oracle
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window=None, scale=None) -> Array:
+    """fp32 softmax attention.  q: (BH, T, hd), k/v: (BH, S, hd)."""
+    bh, t, hd = q.shape
+    s = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    sc = jnp.einsum("bqh,bsh->bqs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & ((qpos - kpos) < window)
+    sc = jnp.where(mask[None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bqs,bsh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan kernel oracle
+# ---------------------------------------------------------------------------
+
+def rglru_seq_ref(log_a: Array, b: Array) -> Array:
+    """h_t = exp(log_a_t) * h_{t-1} + b_t, h_{-1} = 0.  (T, B, W) in fp32."""
+    def step(h, ab):
+        la, bb = ab
+        h = jnp.exp(la.astype(jnp.float32)) * h + bb.astype(jnp.float32)
+        return h, h
+
+    h0 = jnp.zeros(b.shape[1:], jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (log_a, b))
+    return hs.astype(b.dtype)

@@ -1,0 +1,69 @@
+"""Fused RG-LRU sequence kernel — the paper's pipelined-recurrence idea
+(C3) applied to RecurrentGemma's linear recurrence.
+
+Like ``qlstm_cell``: grid = (batch_blocks, T) with T minor, the recurrent
+state h lives in VMEM scratch across timesteps, and the Pallas pipeline
+overlaps the next timestep's (a_t, b_t) HBM→VMEM DMA with the current
+step's VPU work.  The gates/decays are precomputed OUTSIDE the kernel
+(they are pointwise in x_t — embarrassingly parallel MXU work); the kernel
+fuses only the serial part:
+
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(log_a_t)
+
+For train/prefill the pure-JAX associative scan (log-depth) is usually the
+better shape on TPU; this kernel is the LATENCY-OPTIMAL form (exact
+sequential dependency, zero log-depth overhead) used for short sequences
+and as the decode building block — the same trade the paper makes between
+parallel ALUs and the pipelined single ALU (§4.3).
+
+Oracle: ``kernels/ref.py::rglru_seq_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(loga_ref, b_ref, o_ref, h_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = jnp.exp(loga_ref[0].astype(jnp.float32))
+    h_new = a * h_ref[...] + b_ref[0].astype(jnp.float32)
+    h_ref[...] = h_new
+    o_ref[0] = h_new.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_block", "interpret"))
+def rglru_seq_pallas(log_a: Array, b: Array, *, batch_block: int = 128,
+                     interpret: bool = True) -> Array:
+    """log_a, b: (T, B, W) — returns h: (T, B, W) with h_0 = b_0 (zero
+    initial state)."""
+    t_len, bsz, w = log_a.shape
+    bb = min(batch_block, bsz)
+    pad = (-bsz) % bb
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nb = (bsz + pad) // bb
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb, t_len),
+        in_specs=[pl.BlockSpec((1, bb, w), lambda bi, t: (t, bi, 0)),
+                  pl.BlockSpec((1, bb, w), lambda bi, t: (t, bi, 0))],
+        out_specs=pl.BlockSpec((1, bb, w), lambda bi, t: (t, bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_len, bsz + pad, w), b.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, w), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b)
+    return out[:, :bsz]

@@ -1,0 +1,116 @@
+"""Batched request serving — wave scheduling over the decode step.
+
+The paper's deployment scenario is real-time batched inference (§6:
+32 873 samples/s).  At LM scale the equivalent substrate is a request
+batcher: requests queue up, are assembled into fixed-size WAVES (padding
+with inactive slots), and each wave decodes in lockstep against one shared
+cache allocation.  Finished sequences (EOS or length) retire at wave
+boundaries; per-slot retirement within a wave masks the slot's output.
+
+(Continuous batching — per-slot cache positions — needs per-row scatter
+cache updates; wave scheduling is the static-shape-friendly form and what
+the dry-run's decode cells model: every active slot advances together.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new: int
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class WaveBatcher:
+    def __init__(self, params, cfg: ModelConfig, batch_size: int,
+                 max_seq: int):
+        self.params = params
+        self.cfg = cfg
+        self.bs = batch_size
+        self.max_seq = max_seq
+        self.queue: Deque[Request] = deque()
+        self._next_id = 0
+
+        def decode(params, cache, tokens, pos):
+            batch = {"tokens": tokens, "cache_pos": pos}
+            if cfg.attn and cfg.attn.mrope_sections:
+                batch["position_ids"] = jnp.broadcast_to(
+                    pos, (3, batch_size, 1)).astype(jnp.int32)
+            logits, cache = T.forward_decode(params, cache, batch, cfg)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+
+        self._decode = jax.jit(decode)
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               eos_id: Optional[int] = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new, eos_id))
+        return rid
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        bs = self.bs
+        plen = max(len(r.prompt) for r in wave)
+        total = plen + max(r.max_new for r in wave)
+        assert total <= self.max_seq, "request exceeds cache budget"
+        cache = T.init_cache(self.cfg, bs, self.max_seq)
+
+        # left-align prompts, pad with token 0 (masked by per-request plen)
+        toks = np.zeros((bs, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, :len(r.prompt)] = r.prompt
+        cur = jnp.asarray(toks[:, :1])
+        for t in range(total - 1):
+            nxt, cache = self._decode(self.params, cache,
+                                      jnp.asarray(cur),
+                                      jnp.asarray(t, jnp.int32))
+            nxt_np = np.asarray(nxt)
+            if t + 1 < plen:
+                cur = toks[:, t + 1:t + 2]   # teacher-force the prompt
+                continue
+            cur = nxt_np[:, None]
+            for i, r in enumerate(wave):
+                if r.done or t + 1 < len(r.prompt):
+                    continue
+                tok = int(nxt_np[i])
+                r.output.append(tok)
+                if (r.eos_id is not None and tok == r.eos_id) or \
+                        len(r.output) >= r.max_new:
+                    r.done = True
+            if all(r.done for r in wave):
+                break
+        for r in wave:
+            r.done = True
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        results: Dict[int, List[int]] = {}
+        while self.queue:
+            wave = []
+            while self.queue and len(wave) < self.bs:
+                wave.append(self.queue.popleft())
+            while len(wave) < self.bs:   # pad with a dummy slot
+                wave.append(Request(-1, np.zeros(1, np.int32), 1))
+            self._run_wave(wave)
+            for r in wave:
+                if r.rid >= 0:
+                    results[r.rid] = r.output
+        return results

@@ -1,0 +1,98 @@
+"""Serving launcher — batched decode with a KV/recurrent-state cache.
+
+  python -m repro.launch.serve --arch qwen1.5-0.5b --batch 4 --gen 16
+  python -m repro.launch.serve --arch rwkv6-7b --quant w8 --kv-int8
+
+The paper's kind is inference acceleration, so this is the e2e serve
+driver: it prefeeds a prompt through decode steps (cache warm-up), then
+generates greedily, reporting tokens/s and the quantisation mode in use.
+LM archs run the REDUCED config on CPU (--preset full for the real one).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_CONFIGS, reduce_config
+from repro.core.quant import QuantConfig
+from repro.models import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--quant", default=None, choices=[None, "w8", "w8a8"])
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    base = ARCH_CONFIGS[args.arch]
+    cfg = base if args.preset == "full" else reduce_config(base)
+    if args.quant or args.kv_int8:
+        cfg = cfg.replace(quant=QuantConfig(args.quant or "w8",
+                                            quantize_kv=args.kv_int8))
+
+    key = jax.random.key(args.seed)
+    params, axes = T.init_model(cfg, key)
+    if cfg.quant.enabled:
+        params, axes = T.quantize_model_params(params, axes, cfg)
+        print(f"[serve] weights quantised: mode={cfg.quant.mode} "
+              f"int8-KV={cfg.quant.quantize_kv}")
+
+    b = args.batch
+    cache = T.init_cache(cfg, b, args.max_seq)
+
+    @jax.jit
+    def decode(params, cache, tokens, pos):
+        batch = {"tokens": tokens, "cache_pos": pos}
+        if cfg.attn and cfg.attn.mrope_sections:
+            batch["position_ids"] = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+        if not cfg.embed_inputs:
+            # frontend stub: embed token ids through the embedding table
+            emb = params["embed"]
+            e = (emb["q"][tokens].astype(jnp.bfloat16) * emb["s"].astype(jnp.bfloat16)
+                 ) if isinstance(emb, dict) else emb[tokens].astype(jnp.bfloat16)
+            batch = {"inputs_embeds": e, "cache_pos": pos}
+            if cfg.attn and cfg.attn.mrope_sections:
+                batch["position_ids"] = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+        logits, cache = T.forward_decode(params, cache, batch, cfg)
+        return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), cache
+
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(0, cfg.vocab_size, (b, args.prompt_len)).astype(np.int32)
+
+    # prefill via decode steps (cache warm-up)
+    tok = jnp.asarray(prompt[:, :1])
+    for t in range(args.prompt_len):
+        tok, cache = decode(params, cache, jnp.asarray(prompt[:, t:t + 1]),
+                            jnp.asarray(t, jnp.int32))
+    jax.block_until_ready(tok)
+
+    out = []
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len, args.prompt_len + args.gen):
+        tok, cache = decode(params, cache, tok, jnp.asarray(t, jnp.int32))
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    toks = b * args.gen
+    print(f"[serve] {args.arch} ({cfg.n_layers}L d={cfg.d_model}) generated "
+          f"{toks} tokens in {dt:.2f}s = {toks / dt:.1f} tok/s "
+          f"(batch={b}, CPU host)")
+    gen = np.concatenate(out, 1)
+    print("[serve] sample:", gen[0][:12], "...")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Training launcher.
+
+  python -m repro.launch.train --arch lstm-pems --steps 400        # the paper
+  python -m repro.launch.train --arch qwen1.5-0.5b --preset tiny --steps 50
+  python -m repro.launch.train --arch gemma2-2b --preset tiny --quant w8a8 --hard-acts
+
+LM archs run their REDUCED config by default on this CPU container
+(--preset full uses the real config — sized for the TPU meshes, see
+launch/dryrun.py).  Fault tolerance: checkpoints land in --ckpt-dir; rerun
+the same command to resume; SIGTERM checkpoints-and-exits.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_CONFIGS, reduce_config
+from repro.core.qlstm import QLSTMConfig
+from repro.core.quant import QuantConfig
+from repro.data.lm_data import SyntheticLM
+from repro.data.timeseries import pems_like_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.models import lstm_model
+from repro.models import transformer as T
+from repro.sharding.partition import param_shardings, rules_context
+from repro.training.optimizer import OptConfig, apply_updates, init_opt_state
+from repro.training.step import TrainPlan, init_train_state, make_train_step
+from repro.training.train_loop import LoopConfig, Trainer
+
+
+def train_lstm(args):
+    """The paper's model: QAT on PeMS-like data (§6.1)."""
+    cfg: QLSTMConfig = ARCH_CONFIGS["lstm-pems"]
+    data = pems_like_dataset(seq_len=cfg.seq_len, seed=0)
+    xtr, ytr = data["train"]
+    params = lstm_model.init_lstm_model(cfg, jax.random.key(args.seed))[0]
+    opt_cfg = OptConfig(name="adamw", lr=args.lr or 3e-3, weight_decay=0.0,
+                        warmup_steps=20, total_steps=args.steps)
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg),
+             "step": jnp.zeros((), jnp.int32)}
+
+    @jax.jit
+    def step_fn(state, batch):
+        def loss(p):
+            return lstm_model.loss_fn(p, batch, cfg, mode="qat")
+        (l, m), g = jax.value_and_grad(loss, has_aux=True)(state["params"])
+        p, o, om = apply_updates(state["params"], g, state["opt"], opt_cfg)
+        return ({"params": p, "opt": o, "step": state["step"] + 1},
+                {"loss": l, **om})
+
+    def batch_fn(step):
+        rng = np.random.default_rng((args.seed, step))
+        idx = rng.integers(0, len(xtr), args.batch)
+        return {"x": jnp.asarray(xtr[idx]), "y": jnp.asarray(ytr[idx])}
+
+    trainer = Trainer(step_fn, state, batch_fn,
+                      LoopConfig(total_steps=args.steps,
+                                 ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                                 log_every=50))
+    trainer.maybe_resume()
+    out = trainer.run()
+
+    # Evaluation: float vs QAT vs the bit-exact integer (accelerator) path.
+    xte, yte = data["test"]
+    p = trainer.state["params"]
+    for name, fn in [
+            ("float", lambda x: lstm_model.forward(p, x, cfg, "float")),
+            ("qat", lambda x: lstm_model.forward(p, x, cfg, "qat")),
+            ("int8-kernel", lambda x: lstm_model.serve_int(p, x, cfg))]:
+        pred = fn(jnp.asarray(xte))
+        mse = float(jnp.mean((pred - jnp.asarray(yte)) ** 2))
+        print(f"  test MSE [{name:12s}] = {mse:.5f}")
+    return out
+
+
+def train_lm(args):
+    base = ARCH_CONFIGS[args.arch]
+    cfg = base if args.preset == "full" else reduce_config(base)
+    if args.preset == "100m":
+        cfg = base.replace(n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+                           head_dim=64, d_ff=2048, vocab_size=32768,
+                           remat="none")
+    if args.quant:
+        cfg = cfg.replace(quant=QuantConfig(args.quant))
+    if args.hard_acts:
+        cfg = cfg.replace(hard_acts=True)
+
+    mesh = make_host_mesh()
+    with rules_context(mesh, cfg.sharding_overrides):
+        params, axes = T.init_model(cfg, jax.random.key(args.seed))
+        plan = TrainPlan(opt=OptConfig(lr=args.lr or 3e-4,
+                                       warmup_steps=10,
+                                       total_steps=args.steps),
+                         microbatches=args.microbatches,
+                         grad_compress=args.grad_compress)
+        state = init_train_state(params, plan)
+        step_fn = jax.jit(make_train_step(cfg, plan), donate_argnums=0)
+
+        src = SyntheticLM(cfg.vocab_size, seed=args.seed)
+
+        def batch_fn(step):
+            b = src.batch(step, args.batch, args.seq)
+            out = {"tokens": jnp.asarray(b["tokens"]),
+                   "labels": jnp.asarray(b["labels"])}
+            if cfg.attn and cfg.attn.mrope_sections:
+                pos = jnp.broadcast_to(jnp.arange(args.seq),
+                                       (args.batch, args.seq))
+                out["position_ids"] = jnp.stack([pos] * 3)
+            if not cfg.embed_inputs:
+                rng = np.random.default_rng((args.seed, step))
+                out["inputs_embeds"] = jnp.asarray(
+                    rng.normal(0, 1, (args.batch, args.seq, cfg.d_model))
+                    .astype(np.float32)).astype(jnp.bfloat16)
+                del out["tokens"]
+            return out
+
+        trainer = Trainer(step_fn, state, batch_fn,
+                          LoopConfig(total_steps=args.steps,
+                                     ckpt_dir=args.ckpt_dir,
+                                     ckpt_every=args.ckpt_every,
+                                     log_every=10))
+        trainer.maybe_resume()
+        return trainer.run()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lstm-pems",
+                    choices=sorted(ARCH_CONFIGS))
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--quant", default=None, choices=[None, "w8", "w8a8"])
+    ap.add_argument("--hard-acts", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args(argv)
+    if args.arch == "lstm-pems":
+        return train_lstm(args)
+    return train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+# Model substrate: generic decoder LM + recurrent blocks + the paper's LSTM.

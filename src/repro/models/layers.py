@@ -1,0 +1,430 @@
+"""Transformer substrate: norms, RoPE / M-RoPE, GQA attention (windowed /
+softcapped / chunked-online-softmax), GLU MLPs — all quantisation-aware
+(C1) and hard-activation-capable (C2).
+
+Attention is chunked flash-style (online softmax over KV blocks inside a
+sequential map over Q blocks) so 32k-token prefill never materialises a
+(T, S) score matrix.  The masked-rectangle formulation costs ~2x the causal
+FLOPs; this is accounted in the roofline's useful-ratio and is a hillclimb
+lever (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.hard_act import get_float_act, HARD_VARIANT
+from repro.core.quant import QuantConfig, fake_quant_tensor, fq_matmul
+from repro.models.modules import Boxed, map_, param, scan_, split_keys
+from repro.sharding.partition import constrain
+
+Array = jax.Array
+
+
+def act_fn(name: str, cfg: ModelConfig):
+    """Resolve an activation, honouring the hard_acts flag (C2)."""
+    if cfg.hard_acts:
+        name = HARD_VARIANT.get(name, name)
+    return get_float_act(name)
+
+
+# ---------------------------------------------------------------------------
+# Quantisation-aware linear
+# ---------------------------------------------------------------------------
+
+def linear(x: Array, w, quant: QuantConfig, mode: str = "train") -> Array:
+    """x @ w where w is a float array (train/QAT) or a {"q","s"} int8 dict
+    (serve).  Contraction is over x's last dim and w's first dim; w may have
+    extra trailing dims (e.g. (d, H, hd)) — they are flattened."""
+    if isinstance(w, dict):  # quantised serve weights
+        wq, ws = w["q"], w["s"]
+        shp = wq.shape
+        w2 = wq.reshape(shp[0], -1)
+        if quant.mode == "w8a8":
+            # dynamic per-tensor activation quant, int8 x int8 -> int32
+            s_x = jax.lax.stop_gradient(
+                jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0)
+            s_x = jnp.exp2(jnp.ceil(jnp.log2(s_x))) if quant.p2_scale else s_x
+            xq = jnp.clip(jnp.floor(x / s_x + 0.5), -128, 127).astype(jnp.int8)
+            acc = jax.lax.dot_general(
+                xq, w2, (((x.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            y = acc.astype(jnp.float32) * s_x * ws.reshape(1, -1)
+            y = y.astype(x.dtype)
+        else:  # w8: dequantise weights into the matmul
+            y = jax.lax.dot_general(
+                x, (w2.astype(x.dtype) * ws.reshape(1, -1).astype(x.dtype)),
+                (((x.ndim - 1,), (0,)), ((), ())))
+        return y.reshape(x.shape[:-1] + shp[1:])
+    shp = w.shape
+    w2 = w.reshape(shp[0], -1)
+    if mode == "train" and quant.enabled:
+        y = fq_matmul(x, w2.astype(x.dtype), quant)
+    else:
+        y = jnp.dot(x, w2.astype(x.dtype))
+    return y.reshape(x.shape[:-1] + shp[1:])
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Boxed:
+    axes = ("layers",) * len(stack) + (None,)
+    init = "zeros" if cfg.norm == "gemma_rmsnorm" else "ones"
+    return param(None, stack + (cfg.d_model,), axes, init=init)
+
+
+def norm_apply(w: Array, x: Array, cfg: ModelConfig, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * w
+    else:
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        y = y * (1.0 + w) if cfg.norm == "gemma_rmsnorm" else y * w
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: Array, dim: int, theta: float) -> Tuple[Array, Array]:
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    freq = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None) -> Array:
+    """x: (B, T, H, hd).  positions: (B, T) or — M-RoPE — (3, B, T).
+
+    M-RoPE (Qwen2-VL): the head_dim's frequency slots are partitioned into
+    sections, each rotated by its own positional stream (temporal / height /
+    width)."""
+    hd = x.shape[-1]
+    if mrope_sections is not None:
+        cos3, sin3 = _rope_angles(positions, hd, theta)  # (3, B, T, hd/2)
+        parts_c, parts_s = [], []
+        off = 0
+        for i, sec in enumerate(mrope_sections):
+            parts_c.append(cos3[i, ..., off:off + sec])
+            parts_s.append(sin3[i, ..., off:off + sec])
+            off += sec
+        cos = jnp.concatenate(parts_c, -1)
+        sin = jnp.concatenate(parts_s, -1)
+    else:
+        cos, sin = _rope_angles(positions, hd, theta)    # (B, T, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: Array, dim: int) -> Array:
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Dict[str, Boxed]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    la = ("layers",) * len(stack)
+    p = {
+        "wq": param(ks[0], stack + (d, h, hd), la + ("embed", "heads", "head_dim"),
+                    scale=d ** -0.5),
+        "wk": param(ks[1], stack + (d, kv, hd), la + ("embed", "kv_heads", "head_dim"),
+                    scale=d ** -0.5),
+        "wv": param(ks[2], stack + (d, kv, hd), la + ("embed", "kv_heads", "head_dim"),
+                    scale=d ** -0.5),
+        "wo": param(ks[3], stack + (h * hd, d), la + ("heads", "embed"),
+                    scale=(h * hd) ** -0.5),
+    }
+    if cfg.attn and cfg.attn.qkv_bias:
+        p["bq"] = param(None, stack + (h, hd), la + ("heads", "head_dim"), init="zeros")
+        p["bk"] = param(None, stack + (kv, hd), la + ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = param(None, stack + (kv, hd), la + ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def _softcap(scores: Array, cap: Optional[float], hard: bool) -> Array:
+    if cap is None:
+        return scores
+    if hard:  # C2 beyond-paper: softcap's tanh hardened to a clip
+        return jnp.clip(scores, -cap, cap)
+    return cap * jnp.tanh(scores / cap)
+
+
+def _attn_q_chunk(qb: Array, qi: int, j_lo: int, kg: Array, vg: Array, *,
+                  qc: int, kc: int, scale, softcap, hard_softcap, causal,
+                  window, s_valid, q_offset) -> Array:
+    """Online-softmax attention of ONE q chunk against kv blocks
+    [j_lo, j_lo + kg.shape[1]).  qb: (B, qc, KV, g, hd); kg/vg:
+    (B, nj, kc, KV, hd).  Returns (B, qc, KV, g, hd) in fp32."""
+    b, _, kvh, g, hd = qb.shape
+    nj = kg.shape[1]
+    qpos = q_offset + qi * qc + jnp.arange(qc)
+    qf = qb.astype(jnp.float32)
+
+    def kv_step(carry, xs):
+        m, l, acc = carry
+        jj, kb, vb = xs
+        kpos = (j_lo + jj) * kc + jnp.arange(kc)
+        sc = jnp.einsum("bqkgh,bskh->bkgqs", qf,
+                        kb.astype(jnp.float32)) * scale
+        sc = _softcap(sc, softcap, hard_softcap)
+        mask = kpos[None, :] < s_valid
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc * corr[..., None] + pv), None
+
+    m0 = jnp.full((b, kvh, g, qc), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, qc, hd), jnp.float32)
+    (m, l, acc), _ = scan_(kv_step, (m0, l0, a0),
+                           (jnp.arange(nj), jnp.moveaxis(kg, 1, 0),
+                            jnp.moveaxis(vg, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.einsum("bkgqh->bqkgh", out)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Optional[Array] = None,
+                    softcap: Optional[float] = None, hard_softcap: bool = False,
+                    scale: float = 1.0, q_offset: Array = 0,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    kv_valid_len: Optional[Array] = None,
+                    k_scale: Optional[Array] = None,
+                    v_scale: Optional[Array] = None) -> Array:
+    """Chunked online-softmax attention.
+
+    q: (B, T, H, hd); k, v: (B, S, KV, hd); GQA via head grouping.
+    window: traced scalar — qpos-kpos must be < window (SWA / gemma2
+    alternation as scan-compatible data, DESIGN.md §5).
+    kv_valid_len: decode masking (cache slots >= this are invalid).
+    k_scale/v_scale (B, S, KV): int8-KV dequantisation scales (C1 applied to
+    the cache) — k's folds into the scores, v's folds into the softmax
+    weights, so the cache is only ever READ as int8.
+    Returns (B, T, H, hd).
+    """
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qc = min(q_chunk, t)
+    kc = min(kv_chunk, s)
+    tp, sp = -t % qc, -s % kc
+    if tp:
+        q = jnp.pad(q, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    if sp:
+        k = jnp.pad(k, ((0, 0), (0, sp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, sp), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, sp), (0, 0)))
+    nq, nk = (t + tp) // qc, (s + sp) // kc
+    qg = q.reshape(b, nq, qc, kvh, g, hd)
+    kg = k.reshape(b, nk, kc, kvh, hd)
+    vg = v.reshape(b, nk, kc, kvh, hd)
+    scales = ()
+    if k_scale is not None:
+        scales = (jnp.moveaxis(k_scale.reshape(b, nk, kc, kvh), 1, 0),
+                  jnp.moveaxis(v_scale.reshape(b, nk, kc, kvh), 1, 0))
+    s_valid = jnp.asarray(s if kv_valid_len is None else kv_valid_len, jnp.int32)
+
+    # CAUSAL-TRIANGLE path (train/prefill: t == s, no offset): per-q-chunk
+    # STATIC kv bounds skip the strictly-future blocks the masked-rectangle
+    # formulation still computes (~2x attention FLOPs), and a *static*
+    # sliding window additionally skips fully-expired past blocks (SWA cost
+    # becomes window-linear).  §Perf iteration 2.
+    static_window = window if isinstance(window, int) else None
+    if (causal and t == s and tp == 0 and sp == 0
+            and isinstance(q_offset, int) and q_offset == 0
+            and kv_valid_len is None and not scales):
+        outs = []
+        for qi in range(nq):
+            j_hi = ((qi + 1) * qc + kc - 1) // kc          # blocks <= diag
+            j_lo = 0
+            if static_window is not None:
+                j_lo = max(0, (qi * qc - static_window + 1) // kc)
+            outs.append(_attn_q_chunk(
+                qg[:, qi], qi, j_lo, kg[:, j_lo:j_hi], vg[:, j_lo:j_hi],
+                qc=qc, kc=kc, scale=scale, softcap=softcap,
+                hard_softcap=hard_softcap, causal=True, window=window,
+                s_valid=s_valid, q_offset=0))
+        out = jnp.stack(outs, 1).reshape(b, t, h, hd)
+        return out.astype(q.dtype)
+
+    def q_block(qi_and_chunk):
+        qi, qb = qi_and_chunk  # qb: (B, qc, KV, g, hd)
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kj, kb, vb = xs[0], xs[1], xs[2]
+            kpos = kj * kc + jnp.arange(kc)
+            sc = jnp.einsum("bqkgh,bskh->bkgqs", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * scale
+            if scales:
+                ks = xs[3]  # (B, kc, KV)
+                sc = sc * jnp.transpose(ks, (0, 2, 1))[:, :, None, None, :]
+            sc = _softcap(sc, softcap, hard_softcap)
+            mask = kpos[None, :] < s_valid
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+            sc = jnp.where(mask[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            if scales:
+                vs = xs[4]
+                p_v = p * jnp.transpose(vs, (0, 2, 1))[:, :, None, None, :]
+            else:
+                p_v = p
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p_v, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = scan_(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0))
+            + scales)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bkgqh->bqkgh", out)
+
+    outs = map_(q_block, (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, t + tp, h, hd)
+    return out[:, :t].astype(q.dtype)
+
+
+def attn_apply(p: Dict[str, Any], x: Array, positions: Array, *,
+               cfg: ModelConfig, window=None, mode: str = "train",
+               cache: Optional[Tuple[Array, Array]] = None,
+               cache_pos: Optional[Array] = None,
+               ring_window: Optional[int] = None):
+    """GQA attention block body.
+
+    train/prefill: full-sequence causal (chunked).  decode: x is (B, 1, d);
+    cache (k, v) each (B, Smax, KV, hd) is updated at cache_pos (ring-buffer
+    indexed when ring_window is set — bounded-KV SWA decode)."""
+    a = cfg.attn
+    scale = (a.query_scale or cfg.head_dim ** -0.5) if a else cfg.head_dim ** -0.5
+    q = linear(x, p["wq"], cfg.quant, mode)
+    k = linear(x, p["wk"], cfg.quant, mode)
+    v = linear(x, p["wv"], cfg.quant, mode)
+    if a and a.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if not (a and a.sinusoidal):
+        q = apply_rope(q, positions, a.rope_theta, a.mrope_sections)
+        k = apply_rope(k, positions, a.rope_theta, a.mrope_sections)
+    q = constrain(q, "batch", None, "act_heads", None)
+    k = constrain(k, "batch", None, "act_heads", None)
+
+    if mode == "decode":
+        st = dict(cache)
+        slot = cache_pos % ring_window if ring_window else cache_pos
+        quant_kv = st["k"].dtype == jnp.int8
+        if quant_kv:
+            # C1 on the cache: per-(token, head) symmetric int8
+            def q8(t):  # t: (B, 1, KV, hd)
+                s_ = jnp.maximum(jnp.max(jnp.abs(t), -1), 1e-6) / 127.0
+                tq = jnp.clip(jnp.floor(t / s_[..., None] + 0.5),
+                              -128, 127).astype(jnp.int8)
+                return tq, s_.astype(jnp.float32)
+            kq, ks_new = q8(k.astype(jnp.float32))
+            vq, vs_new = q8(v.astype(jnp.float32))
+            st["k"] = jax.lax.dynamic_update_slice(st["k"], kq, (0, slot, 0, 0))
+            st["v"] = jax.lax.dynamic_update_slice(st["v"], vq, (0, slot, 0, 0))
+            st["k_scale"] = jax.lax.dynamic_update_slice(
+                st["k_scale"], ks_new, (0, slot, 0))
+            st["v_scale"] = jax.lax.dynamic_update_slice(
+                st["v_scale"], vs_new, (0, slot, 0))
+            kcache, vcache = st["k"], st["v"]
+            kscale, vscale = st["k_scale"], st["v_scale"]
+        else:
+            st["k"] = jax.lax.dynamic_update_slice(
+                st["k"], k.astype(st["k"].dtype), (0, slot, 0, 0))
+            st["v"] = jax.lax.dynamic_update_slice(
+                st["v"], v.astype(st["v"].dtype), (0, slot, 0, 0))
+            kcache, vcache = st["k"], st["v"]
+            kscale = vscale = None
+        kv_valid = jnp.minimum(cache_pos + 1, st["k"].shape[1])
+        out = flash_attention(
+            q, kcache, vcache, causal=False,
+            window=None if ring_window else window,
+            softcap=a.attn_softcap if a else None, hard_softcap=cfg.hard_acts,
+            scale=scale, q_offset=cache_pos, kv_valid_len=kv_valid,
+            q_chunk=1, kv_chunk=min(4096, st["k"].shape[1]),
+            k_scale=kscale, v_scale=vscale)
+        y = out.reshape(*x.shape[:2], -1)
+        y = linear(y, p["wo"], cfg.quant, mode)
+        return y, st
+
+    out = flash_attention(
+        q, k, v, causal=True, window=window,
+        softcap=a.attn_softcap if a else None, hard_softcap=cfg.hard_acts,
+        scale=scale)
+    y = out.reshape(*x.shape[:2], -1)
+    return linear(y, p["wo"], cfg.quant, mode)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Dict[str, Boxed]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    la = ("layers",) * len(stack)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": param(ks[0], stack + (d, f), la + ("embed", "mlp")),
+            "w_up": param(ks[1], stack + (d, f), la + ("embed", "mlp")),
+            "w_down": param(ks[2], stack + (f, d), la + ("mlp", "embed")),
+        }
+    return {
+        "w_up": param(ks[0], stack + (d, f), la + ("embed", "mlp")),
+        "w_down": param(ks[1], stack + (f, d), la + ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: Dict[str, Any], x: Array, cfg: ModelConfig,
+              mode: str = "train") -> Array:
+    f = act_fn(cfg.act, cfg)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        h = f(linear(x, p["w_gate"], cfg.quant, mode)) * \
+            linear(x, p["w_up"], cfg.quant, mode)
+    else:
+        h = f(linear(x, p["w_up"], cfg.quant, mode))
+    h = constrain(h, "batch", None, "mlp")
+    return linear(h, p["w_down"], cfg.quant, mode)

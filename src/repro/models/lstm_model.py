@@ -1,0 +1,62 @@
+"""The paper's own model (LSTM + dense head) exposed through the same
+framework interface as the LM architectures: (params, axes) init, train
+forward (MSE regression — single-step-ahead time-series prediction on
+PeMS-4W-like data), QAT forward, and the integer serve path that matches
+the accelerator bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.qlstm import (QLSTMConfig, forward_float, forward_int,
+                              forward_qat, init_params, quantize_params)
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+def init_lstm_model(cfg: QLSTMConfig, key) -> Tuple[Any, Any]:
+    params = init_params(cfg, key)
+    # Logical axes: the LSTM is tiny — replicate weights, shard the batch.
+    axes = jax.tree.map(lambda x: tuple(None for _ in x.shape), params)
+    return params, axes
+
+
+def forward(params, x: Array, cfg: QLSTMConfig, mode: str = "qat") -> Array:
+    """x: (B, T, M) float -> (B, P).  mode: float | qat."""
+    return forward_qat(params, x, cfg) if mode == "qat" \
+        else forward_float(params, x, cfg)
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: QLSTMConfig,
+            mode: str = "qat") -> Tuple[Array, Dict[str, Array]]:
+    y = forward(params, batch["x"], cfg, mode)
+    mse = jnp.mean(jnp.square(y - batch["y"]))
+    return mse, {"mse": mse}
+
+
+def serve_int(params, x: Array, cfg: QLSTMConfig,
+              accel: AcceleratorConfig = None, use_kernel: bool = True) -> Array:
+    """Deployment path: float inputs -> integer codes -> fused Pallas kernel
+    (or bit-exact oracle) -> float outputs."""
+    accel = accel or AcceleratorConfig()
+    qp = quantize_params(params, cfg)
+    x_int = fxp.quantize(x, cfg.fxp)
+    if use_kernel and cfg.num_layers == 1 and cfg.alu_mode == "pipelined":
+        h_seq = ops.qlstm_seq(
+            jnp.swapaxes(x_int, 0, 1).astype(cfg.fxp.storage_dtype),
+            qp["layers"][0]["w_x"].astype(cfg.fxp.storage_dtype),
+            qp["layers"][0]["w_h"].astype(cfg.fxp.storage_dtype),
+            qp["layers"][0]["b"], cfg, accel)
+        h_last = h_seq[-1].astype(jnp.int32)
+        y_int = fxp.fxp_matvec_late_rounding(
+            h_last, qp["dense"]["w"], qp["dense"]["b"], cfg.fxp)
+    else:
+        y_int = forward_int(qp, x_int, cfg)
+    return fxp.dequantize(y_int, cfg.fxp)

@@ -1,0 +1,104 @@
+"""Minimal module system: params are nested dicts of arrays; every leaf is
+created together with its LOGICAL AXES tuple so the sharding rules in
+`sharding/partition.py` can map leaves to PartitionSpecs without a parallel
+hand-maintained tree.
+
+``init`` functions build trees of ``Boxed(value, axes)``; ``unbox`` splits
+them into (params, axes) with identical structure — one code path, no drift.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# --- cost-exact (unrolled) tracing mode -------------------------------------
+# XLA's HloCostAnalysis counts a while-loop body ONCE, so the roofline FLOP
+# accounting lowers the step with every model loop unrolled (scan unroll=True)
+# and reads cost_analysis() from the *lowered* (uncompiled) module.  The
+# compile-proof dry-run keeps the scanned form (fast compiles).
+_UNROLL: contextvars.ContextVar = contextvars.ContextVar("unroll", default=False)
+
+
+@contextlib.contextmanager
+def unroll_mode():
+    token = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def unrolling() -> bool:
+    return _UNROLL.get()
+
+
+def scan_(body, init, xs, length=None):
+    """lax.scan that fully unrolls under unroll_mode() (cost-exact HLO)."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _UNROLL.get() else 1)
+
+
+def map_(f, xs):
+    """lax.map that unrolls under unroll_mode()."""
+    if _UNROLL.get():
+        def body(_, x):
+            return (), f(x)
+        _, ys = jax.lax.scan(body, (), xs, unroll=True)
+        return ys
+    return jax.lax.map(f, xs)
+
+
+@dataclasses.dataclass
+class Boxed:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Boxed tree -> (params, axes) twin trees."""
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return params, axes
+
+
+def param(key, shape, axes, scale: float = None, dtype=jnp.float32,
+          init: str = "normal") -> Boxed:
+    """Create one parameter leaf with logical axes metadata."""
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            # fan-in scaling on the contracting dim (first non-stacked dim)
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = fan_in ** -0.5
+        v = jax.random.normal(key, shape, dtype) * scale
+    return Boxed(v, axes)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

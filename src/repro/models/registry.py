@@ -1,0 +1,18 @@
+"""--arch registry: name -> (ModelConfig | QLSTMConfig)."""
+from __future__ import annotations
+
+from typing import Dict, Union
+
+from repro.configs import ARCH_CONFIGS
+from repro.configs.base import ModelConfig
+from repro.core.qlstm import QLSTMConfig
+
+
+def get_config(name: str):
+    if name not in ARCH_CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCH_CONFIGS)}")
+    return ARCH_CONFIGS[name]
+
+
+def list_archs():
+    return sorted(ARCH_CONFIGS)

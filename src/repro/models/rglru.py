@@ -1,0 +1,124 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU.
+
+This is where the paper's technique lands hardest outside the LSTM itself
+(DESIGN.md §4): the RG-LRU's input/recurrence gates are SIGMOIDS — with
+``cfg.hard_acts`` they become the paper's HardSigmoid — and the linear
+recurrence is computed with an ASSOCIATIVE SCAN for train/prefill
+(log-depth, MXU-friendly) while decode keeps the O(1) recurrent state that
+makes long_500k tractable.
+
+Block structure (Griffin):
+  y = W_out( GeLU(W_gate x)  *  RGLRU(conv1d(W_x x)) )
+RG-LRU:
+  r_t = sigma(W_a x_t + b_a)              (recurrence gate)
+  i_t = sigma(W_i x_t + b_i)              (input gate)
+  log a_t = -c * r_t * softplus(Lambda)   (data-dependent decay, c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.hard_act import hard_sigmoid_star
+from repro.models.layers import act_fn, linear
+from repro.models.modules import Boxed, param, split_keys
+from repro.sharding.partition import constrain
+
+Array = jax.Array
+
+
+def _gate_sigmoid(x: Array, cfg: ModelConfig) -> Array:
+    if cfg.hard_acts:  # C2: the paper's HardSigmoid* in float form
+        return hard_sigmoid_star(x, slope=0.125, bound=3.0)
+    return jax.nn.sigmoid(x)
+
+
+def init_rglru_block(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Dict[str, Boxed]:
+    d, w = cfg.d_model, cfg.recurrent.lru_width
+    cw = cfg.recurrent.conv_width
+    ks = split_keys(key, 6)
+    la = ("layers",) * len(stack)
+    return {
+        "w_x": param(ks[0], stack + (d, w), la + ("embed", "lru")),
+        "w_gate": param(ks[1], stack + (d, w), la + ("embed", "lru")),
+        "w_out": param(ks[2], stack + (w, d), la + ("lru", "embed")),
+        "conv_w": param(ks[3], stack + (cw, w), la + (None, "lru"), scale=cw ** -0.5),
+        "conv_b": param(None, stack + (w,), la + ("lru",), init="zeros"),
+        "w_a": param(ks[4], stack + (w, w), la + ("lru", None), scale=w ** -0.5),
+        "b_a": param(None, stack + (w,), la + ("lru",), init="zeros"),
+        "w_i": param(ks[5], stack + (w, w), la + ("lru", None), scale=w ** -0.5),
+        "b_i": param(None, stack + (w,), la + ("lru",), init="zeros"),
+        # Lambda init so a^c spans ~(0.9, 0.999) — Griffin's stable band
+        "lam": param(None, stack + (w,), la + ("lru",), init="ones"),
+    }
+
+
+def _decay(p, gx: Array, cfg: ModelConfig):
+    """log a_t (negative) and the input-normaliser sqrt(1-a_t^2)."""
+    c = cfg.recurrent.c_exponent
+    r = _gate_sigmoid(linear(gx, p["w_a"], cfg.quant) + p["b_a"], cfg)
+    i = _gate_sigmoid(linear(gx, p["w_i"], cfg.quant) + p["b_i"], cfg)
+    log_a = -c * r * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult, i
+
+
+def rglru_scan(p, x: Array, cfg: ModelConfig) -> Array:
+    """Associative-scan linear recurrence over the full sequence.
+
+    x: (B, T, W) — returns h: (B, T, W)."""
+    a, mult, i = _decay(p, x, cfg)
+    b = mult * (i * x)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_s, h = jax.lax.associative_scan(combine, (a.astype(jnp.float32),
+                                                b.astype(jnp.float32)), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(p, x_t: Array, h_prev: Array, cfg: ModelConfig) -> Array:
+    """O(1) decode step. x_t: (B, 1, W); h_prev: (B, W)."""
+    a, mult, i = _decay(p, x_t, cfg)
+    h = a[:, 0] * h_prev + (mult * (i * x_t))[:, 0]
+    return h
+
+
+def _causal_conv(p, x: Array, cfg: ModelConfig) -> Array:
+    """Depthwise causal conv1d, width cfg.recurrent.conv_width."""
+    cw = cfg.recurrent.conv_width
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    y = sum(xp[:, k:k + x.shape[1], :] * p["conv_w"][k] for k in range(cw))
+    return y + p["conv_b"]
+
+
+def rec_block_apply(p, x: Array, cfg: ModelConfig, mode: str = "train",
+                    state: Dict[str, Array] = None):
+    """Full Griffin recurrent block.
+
+    train/prefill: returns y (B, T, d).
+    decode: x is (B, 1, d); state {"h": (B,W), "conv": (B, cw-1, W)};
+    returns (y, new_state)."""
+    gate = act_fn("gelu", cfg)(linear(x, p["w_gate"], cfg.quant, mode))
+    gx = linear(x, p["w_x"], cfg.quant, mode)
+    gx = constrain(gx, "batch", None, "lru")
+    if mode == "decode":
+        cw = cfg.recurrent.conv_width
+        conv_st = state["conv"]  # (B, cw-1, W) previous inputs
+        window = jnp.concatenate([conv_st, gx], axis=1)  # (B, cw, W)
+        cx = jnp.einsum("bkw,kw->bw", window, p["conv_w"])[:, None, :] + p["conv_b"]
+        h = rglru_step(p, cx, state["h"], cfg)
+        y = linear(gate * h[:, None, :], p["w_out"], cfg.quant, mode)
+        return y, {"h": h, "conv": window[:, 1:, :]}
+    cx = _causal_conv(p, gx, cfg)
+    h = rglru_scan(p, cx, cfg)
+    return linear(gate * h, p["w_out"], cfg.quant, mode)

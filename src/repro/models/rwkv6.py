@@ -1,0 +1,235 @@
+"""RWKV-6 "Finch" block (attention-free, data-dependent decay).
+
+Two sequence-mixing formulations, selected by ``RWKVConfig.chunk``:
+
+  * ``wkv_sequential`` — the literal per-token recurrence (state
+    S_t = diag(d_t) S_{t-1} + k_t v_t^T).  O(1) state; used for decode and
+    as the correctness oracle.
+  * ``wkv_chunked``    — block-parallel form (flash-linear-attention style):
+    within a chunk of C tokens the outputs are computed with (C x C)
+    MXU matmuls and pairwise decay factors exp(L_{t-1} - L_s) (all <= 1 —
+    numerically safe); chunks are chained by a short scan.  This is the
+    paper's C3 (pipelined MAC) philosophy applied to an SSM: restructure a
+    serial recurrence so the multiplier array stays busy.
+
+The token-shift gates are sigmoids -> hard-activation capable (C2).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.hard_act import hard_sigmoid_star
+from repro.models.layers import linear, norm_apply
+from repro.models.modules import Boxed, param, scan_, split_keys
+from repro.sharding.partition import constrain
+
+Array = jax.Array
+
+
+def _sigmoid(x: Array, cfg: ModelConfig) -> Array:
+    if cfg.hard_acts:
+        return hard_sigmoid_star(x, slope=0.125, bound=3.0)
+    return jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_rwkv_block(key, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Dict[str, Boxed]:
+    d = cfg.d_model
+    r = cfg.rwkv.lora_r
+    rw = cfg.rwkv.lora_w
+    f = cfg.d_ff
+    ks = split_keys(key, 16)
+    la = ("layers",) * len(stack)
+    P = lambda i, shape, axes, **kw: param(ks[i], stack + shape, la + axes, **kw)
+    zeros = lambda shape, axes: param(None, stack + shape, la + axes, init="zeros")
+    return {
+        # --- time mix ---
+        "mu_x": zeros((d,), (None,)),             # base lerp for the ddlerp input
+        "mu": zeros((5, d), (None, None)),        # per-channel mu for r,k,v,w,g
+        "lora_a": P(0, (5, d, r), (None, "embed", None), scale=d ** -0.5),
+        "lora_b": zeros((5, r, d), (None, None, None)),
+        "w_r": P(1, (d, d), ("embed", "heads_d")),
+        "w_k": P(2, (d, d), ("embed", "heads_d")),
+        "w_v": P(3, (d, d), ("embed", "heads_d")),
+        "w_g": P(4, (d, d), ("embed", "heads_d")),
+        "w_o": P(5, (d, d), ("heads_d", "embed")),
+        "w0": zeros((d,), (None,)),               # decay base
+        "wl_a": P(6, (d, rw), ("embed", None), scale=d ** -0.5),
+        "wl_b": zeros((rw, d), (None, None)),
+        "u": zeros((d,), (None,)),                # per-channel bonus
+        "ln_x": param(None, stack + (d,), la + (None,), init="ones"),
+        # --- channel mix ---
+        "cm_mu_r": zeros((d,), (None,)),
+        "cm_mu_k": zeros((d,), (None,)),
+        "cm_r": P(7, (d, d), ("embed", "mlp2")),
+        "cm_k": P(8, (d, f), ("embed", "mlp")),
+        "cm_v": P(9, (f, d), ("mlp", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv core
+# ---------------------------------------------------------------------------
+
+def wkv_sequential(r, k, v, w, u, state=None):
+    """Literal recurrence.  r,k,v: (B, T, H, N); w: (B, T, H, N) decay logits
+    (d_t = exp(-exp(w))); u: (H, N).  state: (B, H, N, N) or None.
+    Returns (y (B,T,H,N), final_state)."""
+    b, t, h, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw          # (B, H, N)
+        d = jnp.exp(-jnp.exp(wt.astype(jnp.float32)))
+        kv = kt[..., :, None] * vt[..., None, :]        # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None] [..., None] * kv)
+        s = d[..., None] * s + kv
+        return s, y
+
+    rr, kk, vv, ww = (jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = scan_(step, state, (rr, kk, vv, ww))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state=None, chunk: int = 128):
+    """Block-parallel WKV.  Same signature/semantics as wkv_sequential.
+
+    Derivation: with per-channel decays d_t on the k-dim and L_t = cumsum
+    (log d) within a chunk,
+      y_t = r_t . (S_chunk_in * exp(L_{t-1}))            [inter-chunk]
+          + sum_{s<t} (r_t exp(L_{t-1}-L_s) . k_s) v_s   [intra, strictly lower]
+          + (r_t . u k_t) v_t                            [current-token bonus]
+    exp(L_{t-1}-L_s) <= 1 for s < t, so everything stays in fp32 safely.
+    """
+    b, t, h, n = r.shape
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        # pad decay logits with -inf => d = exp(-exp(-inf)) = 1 (no decay),
+        # so the chunk-final state stays valid for prefill->decode handoff.
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=-1e30)
+    nc = (t + pad) // c
+    f32 = lambda a: a.astype(jnp.float32)
+    rc = f32(r).reshape(b, nc, c, h, n)
+    kc = f32(k).reshape(b, nc, c, h, n)
+    vc = f32(v).reshape(b, nc, c, h, n)
+    logd = -jnp.exp(f32(w)).reshape(b, nc, c, h, n)     # log d_t  (<= 0)
+    L = jnp.cumsum(logd, axis=2)                        # L_t within chunk
+
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def chunk_step(s, inp):
+        rb, kb, vb, Lb, ldb = inp   # (B, C, H, N), L: cumsum, ld: log d
+        Lprev = Lb - ldb            # L_{t-1} (L before this token)
+        r_in = rb * jnp.exp(Lprev)                     # decay from chunk start
+        y_inter = jnp.einsum("bchn,bhnm->bchm", r_in, s)
+        # intra-chunk: scores[t, s] = sum_n r_t[n] k_s[n] exp(L_{t-1}-L_s)[n]
+        # computed per-n-pair via masked matmul over n with decay folded into
+        # both sides: a_t = r_t * exp(L_{t-1}), b_s = k_s * exp(-L_s).
+        # exp(-L_s) can overflow for strongly-decayed channels; clamp since
+        # those channels contribute exp(L_{t-1}-L_s) ~ 0 anyway via a_t.
+        k_out = kb * jnp.exp(jnp.maximum(-Lb, -60.0))   # == exp(-L_s), clamped
+        scores = jnp.einsum("bchn,bshn->bhcs", r_in, k_out)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)    # strictly lower
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhcs,bshn->bchn", scores, vb)
+        bonus = jnp.einsum("bchn,bchn->bch", rb, u[None, None] * kb)
+        y_bonus = bonus[..., None] * vb
+        # state to next chunk: S' = diag(exp(L_C)) S + sum_s exp(L_C - L_s) k_s v_s
+        LC = Lb[:, -1:, :, :]                           # (B,1,H,N)
+        k_fold = kb * jnp.exp(LC - Lb)
+        s_new = jnp.exp(LC[:, 0])[..., None] * s + \
+            jnp.einsum("bshn,bshm->bhnm", k_fold, vb)
+        return s_new, y_inter + y_intra + y_bonus
+
+    xs = (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(L, 1, 0),
+          jnp.moveaxis(logd, 1, 0))
+    state, ys = scan_(chunk_step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * c, h, n)[:, :t]
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def _shift(x: Array, last: Array = None) -> Array:
+    """Token shift: x_{t-1} (zeros / `last` state at t=0)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], 1) if x.shape[1] > 1 \
+        else last[:, None, :]
+
+
+def _ddlerp(p, x, xx, which: int):
+    """Data-dependent lerp (the Finch token-shift innovation)."""
+    mu_x = p["mu_x"]
+    base = x + (xx - x) * mu_x
+    lora = jnp.tanh(base @ p["lora_a"][which]) @ p["lora_b"][which]
+    mu = p["mu"][which] + lora
+    return x + (xx - x) * mu
+
+
+def time_mix_apply(p, x: Array, cfg: ModelConfig, mode: str = "train",
+                   state: Dict[str, Array] = None):
+    b, t, d = x.shape
+    h = d // cfg.rwkv.head_dim
+    n = cfg.rwkv.head_dim
+    xx = _shift(x, state["tm_shift"] if state else None)
+    xr = _ddlerp(p, x, xx, 0)
+    xk = _ddlerp(p, x, xx, 1)
+    xv = _ddlerp(p, x, xx, 2)
+    xw = _ddlerp(p, x, xx, 3)
+    xg = _ddlerp(p, x, xx, 4)
+    r = linear(xr, p["w_r"], cfg.quant, mode).reshape(b, t, h, n)
+    k = linear(xk, p["w_k"], cfg.quant, mode).reshape(b, t, h, n)
+    v = linear(xv, p["w_v"], cfg.quant, mode).reshape(b, t, h, n)
+    g = linear(xg, p["w_g"], cfg.quant, mode)
+    g = g * _sigmoid(g, cfg)  # silu/hard-silu gate
+    w = (p["w0"] + jnp.tanh(xw @ p["wl_a"]) @ p["wl_b"]).reshape(b, t, h, n)
+    u = p["u"].reshape(h, n)
+    r = constrain(r, "batch", None, "act_heads", None)
+    k = constrain(k, "batch", None, "act_heads", None)
+
+    wkv_state = state["wkv"] if state else None
+    if mode == "decode" or t == 1:
+        y, s_new = wkv_sequential(r, k, v, w, u, wkv_state)
+    else:
+        y, s_new = wkv_chunked(r, k, v, w, u, wkv_state, cfg.rwkv.chunk)
+    y = y.reshape(b, t, d).astype(x.dtype)
+    # per-head groupnorm (ln_x approximates RWKV's GroupNorm over heads)
+    yh = y.reshape(b, t, h, n).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(jnp.square(yh), -1, keepdims=True) + 1e-5)
+    y = (yh.reshape(b, t, d) * p["ln_x"]).astype(x.dtype)
+    out = linear(y * g, p["w_o"], cfg.quant, mode)
+    if state is not None or mode == "decode":
+        return out, {"tm_shift": x[:, -1], "wkv": s_new}
+    return out
+
+
+def channel_mix_apply(p, x: Array, cfg: ModelConfig, mode: str = "train",
+                      state: Dict[str, Array] = None):
+    xx = _shift(x, state["cm_shift"] if state else None)
+    xr = x + (xx - x) * p["cm_mu_r"]
+    xk = x + (xx - x) * p["cm_mu_k"]
+    r = _sigmoid(linear(xr, p["cm_r"], cfg.quant, mode), cfg)
+    k = jnp.square(jax.nn.relu(linear(xk, p["cm_k"], cfg.quant, mode)))
+    k = constrain(k, "batch", None, "mlp")
+    y = r * linear(k, p["cm_v"], cfg.quant, mode)
+    if state is not None or mode == "decode":
+        return y, {"cm_shift": x[:, -1]}
+    return y

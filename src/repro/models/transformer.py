@@ -1,0 +1,545 @@
+"""Generic decoder-only LM covering every assigned architecture.
+
+Composition rules (from ModelConfig):
+  * family attn/moe/vlm/audio/dense — homogeneous block stack, scanned with
+    stacked params; per-layer attention WINDOWS are scan data so gemma2's
+    local/global alternation and mixtral's SWA share one compiled body.
+  * family ssm (rwkv6)   — rwkv time-mix mixer + channel-mix "MLP".
+  * family hybrid (recurrentgemma) — (rec, rec, attn) pattern grouped into
+    scanned full periods + an unscanned tail (DESIGN.md §5).
+
+Entry points:
+  init_model      -> (params, axes)
+  forward_train   -> per-microbatch CE loss (+ MoE aux)
+  init_cache      -> decode cache pytree (+ logical axes)
+  forward_decode  -> one-token serve step against the cache
+  forward_prefill -> full-sequence logits (inference-prefill shape)
+  quantize_model_params -> W8/W8A8 serve weights (C1 at LM scale)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant import quantize_tensor
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RW
+from repro.models.modules import (Boxed, is_boxed, param, scan_,
+                                  split_keys, unbox)
+from repro.sharding.partition import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str, stack: Tuple[int, ...]):
+    """One block kind's params, stacked over `stack` layers."""
+    k1, k2 = jax.random.split(key)
+    la = ("layers",) * len(stack)
+    blk: Dict[str, Any] = {
+        "ln1": L.init_norm(cfg, stack),
+        "ln2": L.init_norm(cfg, stack),
+    }
+    if cfg.post_norms:
+        blk["ln1_post"] = L.init_norm(cfg, stack)
+        blk["ln2_post"] = L.init_norm(cfg, stack)
+    if kind == "attn":
+        blk["mixer"] = L.init_attn(k1, cfg, stack)
+    elif kind == "rec":
+        blk["mixer"] = RG.init_rglru_block(k1, cfg, stack)
+    elif kind == "rwkv":
+        rw = RW.init_rwkv_block(k1, cfg, stack)
+        blk["mixer"] = {k: v for k, v in rw.items() if not k.startswith("cm_")}
+        blk["mlp"] = {k: v for k, v in rw.items() if k.startswith("cm_")}
+        return blk
+    if cfg.moe is not None:
+        blk["mlp"] = MOE.init_moe(k2, cfg, stack)
+    else:
+        blk["mlp"] = L.init_mlp(k2, cfg, stack)
+    return blk
+
+
+def init_model(cfg: ModelConfig, key) -> Tuple[Any, Any]:
+    """Returns (params, logical_axes) twin pytrees."""
+    ks = split_keys(key, 4)
+    tree: Dict[str, Any] = {}
+    tree["embed"] = param(ks[0], (cfg.vocab_size, cfg.d_model),
+                          ("vocab", "embed"), scale=1.0)
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        pat = cfg.recurrent.block_pattern
+        full = cfg.n_layers // len(pat)
+        tail = cfg.n_layers - full * len(pat)
+        gkeys = split_keys(ks[1], len(pat) + 1)
+        tree["groups"] = [
+            _init_block(gkeys[j], cfg, pat[j], (full,)) for j in range(len(pat))
+        ]
+        tree["tail"] = ([_init_block(gkeys[-1], cfg, pat[0], (tail,))]
+                        if tail else [])
+        assert all(k == pat[0] for k in pat[:tail]), "tail must be homogeneous"
+    else:
+        tree["blocks"] = _init_block(ks[1], cfg, kinds[0], (cfg.n_layers,))
+    tree["final_norm"] = L.init_norm(cfg)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = param(ks[2], (cfg.d_model, cfg.vocab_size),
+                                ("embed", "vocab"), scale=cfg.d_model ** -0.5)
+    return unbox(tree)
+
+
+def num_params(cfg: ModelConfig) -> int:
+    """Analytic parameter count (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_model(cfg, k)[0], jax.random.key(0))
+    return sum(int(x.size) for x in jax.tree.leaves(shapes))
+
+
+def num_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: only top_k experts count)."""
+    n = num_params(cfg)
+    if cfg.moe is None:
+        return n
+    m = cfg.moe
+    per_layer_expert = 3 * cfg.d_model * m.d_ff
+    inactive = cfg.n_layers * (m.num_experts - m.top_k) * per_layer_expert
+    return n - inactive
+
+
+# ---------------------------------------------------------------------------
+# block body
+# ---------------------------------------------------------------------------
+
+def _block_apply(p, x: Array, kind: str, cfg: ModelConfig, *,
+                 positions, window=None, mode: str = "train",
+                 state=None, cache_pos=None, ring_window=None):
+    """Residual block: norm -> mixer -> (+), norm -> mlp -> (+).
+
+    Returns (x, aux, new_state)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.norm_apply(p["ln1"], x, cfg)
+    new_state = None
+    if kind == "attn":
+        if mode == "decode":
+            h, new_state = L.attn_apply(p["mixer"], h, positions, cfg=cfg,
+                                        window=window, mode=mode,
+                                        cache=state, cache_pos=cache_pos,
+                                        ring_window=ring_window)
+        else:
+            h = L.attn_apply(p["mixer"], h, positions, cfg=cfg,
+                             window=window, mode=mode)
+    elif kind == "rec":
+        if mode == "decode":
+            h, new_state = RG.rec_block_apply(p["mixer"], h, cfg, mode, state)
+        else:
+            h = RG.rec_block_apply(p["mixer"], h, cfg, mode)
+    elif kind == "rwkv":
+        if mode == "decode":
+            h, tm_state = RW.time_mix_apply(p["mixer"], h, cfg, mode,
+                                            {"tm_shift": state["tm_shift"],
+                                             "wkv": state["wkv"]})
+            new_state = dict(tm_state)
+        else:
+            h = RW.time_mix_apply(p["mixer"], h, cfg, mode)
+    if cfg.post_norms:
+        h = L.norm_apply(p["ln1_post"], h, cfg)
+    x = x + h.astype(x.dtype)
+
+    h = L.norm_apply(p["ln2"], x, cfg)
+    if kind == "rwkv":
+        if mode == "decode":
+            h, cm_state = RW.channel_mix_apply(p["mlp"], h, cfg, mode,
+                                               {"cm_shift": state["cm_shift"]})
+            new_state.update(cm_state)
+        else:
+            h = RW.channel_mix_apply(p["mlp"], h, cfg, mode)
+    elif cfg.moe is not None:
+        h, aux = MOE.moe_apply(p["mlp"], h, cfg, mode)
+    else:
+        h = L.mlp_apply(p["mlp"], h, cfg, mode)
+    if cfg.post_norms:
+        h = L.norm_apply(p["ln2_post"], h, cfg)
+    x = x + h.astype(x.dtype)
+    x = constrain(x, "batch", None, None)
+    return x, aux, new_state
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(params, batch: Dict[str, Array], cfg: ModelConfig,
+           positions) -> Array:
+    if "inputs_embeds" in batch:
+        h = batch["inputs_embeds"].astype(cfg.dtype)
+    else:
+        emb = params["embed"]
+        if isinstance(emb, dict):  # quantised embedding
+            h = (emb["q"][batch["tokens"]].astype(cfg.dtype)
+                 * emb["s"].astype(cfg.dtype))
+        else:
+            h = emb[batch["tokens"]].astype(cfg.dtype)
+    if cfg.norm == "gemma_rmsnorm":  # gemma scales embeddings by sqrt(d)
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if cfg.attn and cfg.attn.sinusoidal:
+        h = h + L.sinusoidal_embedding(positions, cfg.d_model).astype(h.dtype)
+    return constrain(h, "batch", None, None)
+
+
+def _logits(params, h: Array, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        emb = params["embed"]
+        w = (emb["q"].astype(h.dtype) * emb["s"].astype(h.dtype)).T \
+            if isinstance(emb, dict) else emb.astype(h.dtype).T
+        logits = h @ w
+    else:
+        logits = L.linear(h, params["lm_head"], cfg.quant,
+                          "serve" if isinstance(params.get("lm_head"), dict)
+                          else "train")
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        cap = cfg.final_softcap
+        logits = jnp.clip(logits, -cap, cap) if cfg.hard_acts \
+            else cap * jnp.tanh(logits / cap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# forward: train
+# ---------------------------------------------------------------------------
+
+def _positions_for(batch, b, s, offset=0):
+    if "position_ids" in batch:
+        return batch["position_ids"]
+    return jnp.broadcast_to(jnp.arange(s) + offset, (b, s))
+
+
+def _run_blocks(params, h, cfg: ModelConfig, positions, mode: str):
+    """Scan the layer stack(s) over a full sequence (train/prefill)."""
+    seq = h.shape[1]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def make_body(kind, static_win="traced"):
+        def body(x, xs):
+            p, window = xs
+            if static_win != "traced":
+                window = static_win  # python int or None: enables the
+                #                      causal-triangle static kv bounds
+            x, aux, _ = _block_apply(p, x, kind, cfg, positions=positions,
+                                     window=window, mode=mode)
+            return x, aux
+        if cfg.remat == "full":
+            return jax.checkpoint(body)
+        return body
+
+    if cfg.family == "hybrid":
+        # Scan over FULL PERIODS of the block pattern: the body applies one
+        # (rec, rec, attn) triple, preserving the true interleaving.
+        pat = cfg.recurrent.block_pattern
+        attn_win = min((w for w in cfg.layer_windows(seq)), default=seq)
+        attn_win = None if attn_win >= seq else int(attn_win)  # static
+
+        def period_body(x, xs):
+            aux = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(pat):
+                x, a, _ = _block_apply(xs[j], x, kind, cfg,
+                                       positions=positions,
+                                       window=attn_win if kind == "attn"
+                                       else None,
+                                       mode=mode)
+                aux += a
+            return x, aux
+
+        body = jax.checkpoint(period_body) if cfg.remat == "full" else period_body
+        h, auxs = scan_(body, h, tuple(params["groups"]))
+        aux_total += auxs.sum()
+        for p in params["tail"]:
+            n_tail = jax.tree.leaves(p)[0].shape[0]
+            w = jnp.zeros((n_tail,), jnp.int32)
+            h, auxs = scan_(make_body(pat[0]), h, (p, w))
+            aux_total += auxs.sum()
+    else:
+        kind = cfg.layer_kinds()[0]
+        static_win = "traced"
+        windows = jnp.zeros((cfg.n_layers,), jnp.int32)
+        if kind == "attn":
+            wins = cfg.layer_windows(seq)
+            if len(set(wins)) == 1:  # uniform: static (triangle + SWA skip)
+                static_win = None if wins[0] >= seq else int(wins[0])
+            else:                    # gemma2 local/global alternation
+                windows = jnp.asarray(wins, jnp.int32)
+        h, auxs = scan_(make_body(kind, static_win), h,
+                        (params["blocks"], windows))
+        aux_total += auxs.sum()
+    return h, aux_total
+
+
+def forward_train(params, batch: Dict[str, Array], cfg: ModelConfig
+                  ) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token CE loss over one (micro)batch."""
+    tokens_or_embeds = batch.get("tokens", batch.get("inputs_embeds"))
+    b, s = tokens_or_embeds.shape[:2]
+    positions = _positions_for(batch, b, s)
+    h = _embed(params, batch, cfg, positions)
+    h, aux = _run_blocks(params, h, cfg, positions, "train")
+    h = L.norm_apply(params["final_norm"], h, cfg)
+    logits = _logits(params, h, cfg)                    # (B, S, V) fp32
+    labels = batch["labels"]
+    lw = (labels[:, 1:] >= 0).astype(jnp.float32)       # -1 = padding
+    lse = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+    tgt = jnp.take_along_axis(logits[:, :-1],
+                              jnp.maximum(labels[:, 1:], 0)[..., None],
+                              axis=-1)[..., 0]
+    ce = jnp.sum((lse - tgt) * lw) / jnp.maximum(lw.sum(), 1.0)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# forward: prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward_prefill(params, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    tokens_or_embeds = batch.get("tokens", batch.get("inputs_embeds"))
+    b, s = tokens_or_embeds.shape[:2]
+    positions = _positions_for(batch, b, s)
+    h = _embed(params, batch, cfg, positions)
+    h, _ = _run_blocks(params, h, cfg, positions, "prefill")
+    h = L.norm_apply(params["final_norm"], h, cfg)
+    return _logits(params, h[:, -1:], cfg)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int
+               ) -> Dict[str, Tuple[Tuple[int, ...], Any, Tuple]]:
+    """{name: (shape, dtype, logical_axes)} for the decode cache.
+
+    Attention KV is bounded by the layer's window when EVERY attn layer is
+    windowed (ring-buffer decode) — this is what makes mixtral's long_500k
+    cell runnable (DESIGN.md §4). int8 KV when cfg.quant.quantize_kv."""
+    kinds = cfg.layer_kinds()
+    n_attn = sum(k == "attn" for k in kinds)
+    specs = {}
+    kv_dtype = jnp.int8 if cfg.quant.quantize_kv else jnp.bfloat16
+    if n_attn:
+        windows = cfg.layer_windows(seq_len)
+        s_cache = max(windows)  # uniform (ragged caches break stacking)
+        kv_shape = (n_attn, batch, s_cache, cfg.n_kv_heads, cfg.head_dim)
+        # TP placement of the cache: shard KV heads when they divide the
+        # production TP width, otherwise shard the SEQUENCE dim (sequence-
+        # parallel decode attention).  Without this, GSPMD all-gathers the
+        # entire cache every step for head-replicated archs (§Perf iter 1).
+        from repro.sharding.partition import PRODUCTION_TP
+        heads_ok = cfg.n_kv_heads % PRODUCTION_TP == 0
+        seq_ax = None if heads_ok else "kv_seq"
+        axes = ("layers", "batch", seq_ax, "kv_heads", None)
+        specs["k"] = (kv_shape, kv_dtype, axes)
+        specs["v"] = (kv_shape, kv_dtype, axes)
+        if cfg.quant.quantize_kv:
+            sc_axes = ("layers", "batch", seq_ax, "kv_heads")
+            specs["k_scale"] = ((n_attn, batch, s_cache, cfg.n_kv_heads),
+                                jnp.float32, sc_axes)
+            specs["v_scale"] = ((n_attn, batch, s_cache, cfg.n_kv_heads),
+                                jnp.float32, sc_axes)
+    n_rec = sum(k == "rec" for k in kinds)
+    if n_rec:
+        w, cw = cfg.recurrent.lru_width, cfg.recurrent.conv_width
+        specs["rec_h"] = ((n_rec, batch, w), jnp.float32,
+                          ("layers", "batch", "lru"))
+        specs["rec_conv"] = ((n_rec, batch, cw - 1, w), jnp.bfloat16,
+                             ("layers", "batch", None, "lru"))
+    n_rwkv = sum(k == "rwkv" for k in kinds)
+    if n_rwkv:
+        hd = cfg.rwkv.head_dim
+        nh = cfg.d_model // hd
+        specs["wkv"] = ((n_rwkv, batch, nh, hd, hd), jnp.float32,
+                        ("layers", "batch", "act_heads", None, None))
+        specs["tm_shift"] = ((n_rwkv, batch, cfg.d_model), jnp.bfloat16,
+                             ("layers", "batch", None))
+        specs["cm_shift"] = ((n_rwkv, batch, cfg.d_model), jnp.bfloat16,
+                             ("layers", "batch", None))
+    return specs
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return {k: jnp.zeros(sh, dt) for k, (sh, dt, _) in
+            cache_spec(cfg, batch, seq_len).items()}
+
+
+_STATE_KEYS = {
+    "attn": (("k", "k"), ("v", "v"), ("k_scale", "k_scale"),
+             ("v_scale", "v_scale")),
+    "rec": (("h", "rec_h"), ("conv", "rec_conv")),
+    "rwkv": (("wkv", "wkv"), ("tm_shift", "tm_shift"), ("cm_shift", "cm_shift")),
+}
+
+
+def _state_slice(cache, kind, lo, hi, cfg):
+    return {sk: cache[ck][lo:hi] for sk, ck in _STATE_KEYS[kind]
+            if ck in cache}
+
+
+def _state_write(new_cache, kind, lo, hi, ns_stacked):
+    for sk, ck in _STATE_KEYS[kind]:
+        if ck in new_cache and sk in ns_stacked:
+            if lo == 0 and hi == new_cache[ck].shape[0]:
+                new_cache[ck] = ns_stacked[sk]   # full range: no copy
+            else:
+                new_cache[ck] = new_cache[ck].at[lo:hi].set(ns_stacked[sk])
+
+
+def forward_decode(params, cache: Dict[str, Array], batch: Dict[str, Array],
+                   cfg: ModelConfig) -> Tuple[Array, Dict[str, Array]]:
+    """One serve step: one new token per sequence against the cache.
+
+    Cache layout — homogeneous: states stacked (L, ...).  Hybrid: the attn
+    cache is (periods, ...); rec states are ordered (position-group, period)
+    then tail.  init_cache/cache_spec sizes match by construction."""
+    cache_pos = batch["cache_pos"]
+    tokens_or_embeds = batch.get("tokens", batch.get("inputs_embeds"))
+    b = tokens_or_embeds.shape[0]
+    positions = (batch["position_ids"] if "position_ids" in batch
+                 else jnp.full((b, 1), cache_pos, jnp.int32))
+    h = _embed(params, batch, cfg, positions)
+    new_cache = dict(cache)
+    seq_budget = cache["k"].shape[2] if "k" in cache else None
+    ring = (seq_budget if (cfg.uniform_window and
+                           seq_budget == cfg.uniform_window) else None)
+
+    if cfg.family == "hybrid":
+        pat = cfg.recurrent.block_pattern
+        full = cfg.n_layers // len(pat)
+        win = jnp.asarray(cfg.attn.window or ((1 << 31) - 1), jnp.int32)
+        n_rec_pos = sum(k == "rec" for k in pat)
+
+        # xs: per pattern position, (params, state-slice across periods)
+        xs, rj, aj = [], 0, 0
+        for j, kind in enumerate(pat):
+            if kind == "rec":
+                st = _state_slice(cache, "rec", rj * full, (rj + 1) * full, cfg)
+                rj += 1
+            else:
+                st = _state_slice(cache, "attn", aj * full, (aj + 1) * full, cfg)
+                aj += 1
+            xs.append((params["groups"][j], st))
+
+        def period_body(x, xs_t):
+            ys = []
+            for j, kind in enumerate(pat):
+                p_j, st_j = xs_t[j]
+                x, _, ns = _block_apply(
+                    p_j, x, kind, cfg, positions=positions,
+                    window=win if kind == "attn" else None, mode="decode",
+                    state=st_j, cache_pos=cache_pos, ring_window=ring)
+                ys.append(ns)
+            return x, tuple(ys)
+
+        h, ys = scan_(period_body, h, tuple(xs))
+        rj = aj = 0
+        for j, kind in enumerate(pat):
+            if kind == "rec":
+                _state_write(new_cache, "rec", rj * full, (rj + 1) * full, ys[j])
+                rj += 1
+            else:
+                _state_write(new_cache, "attn", aj * full, (aj + 1) * full, ys[j])
+                aj += 1
+        # tail (homogeneous rec layers after the last full period)
+        for p in params["tail"]:
+            n = jax.tree.leaves(p)[0].shape[0]
+            lo = n_rec_pos * full
+            st = _state_slice(cache, "rec", lo, lo + n, cfg)
+
+            def tail_body(x, xs_t):
+                p_l, st_l = xs_t
+                x, _, ns = _block_apply(p_l, x, "rec", cfg,
+                                        positions=positions, mode="decode",
+                                        state=st_l, cache_pos=cache_pos)
+                return x, ns
+
+            h, ns = scan_(tail_body, h, (p, st))
+            _state_write(new_cache, "rec", lo, lo + n, ns)
+    else:
+        kind = cfg.layer_kinds()[0]
+        n = cfg.n_layers
+        if kind == "attn":
+            win = jnp.asarray([min(w, (1 << 31) - 1) for w in
+                               cfg.layer_windows(1 << 60)], jnp.int32)
+        else:
+            win = jnp.zeros((n,), jnp.int32)
+        st = _state_slice(cache, kind, 0, n, cfg)
+
+        def body(x, xs_t):
+            p_l, w_l, st_l = xs_t
+            x, _, ns = _block_apply(p_l, x, kind, cfg, positions=positions,
+                                    window=w_l, mode="decode", state=st_l,
+                                    cache_pos=cache_pos, ring_window=ring)
+            return x, ns
+
+        h, ns = scan_(body, h, (params["blocks"], win, st))
+        _state_write(new_cache, kind, 0, n, ns)
+
+    h = L.norm_apply(params["final_norm"], h, cfg)
+    return _logits(params, h, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# serve-time quantisation (C1 at LM scale)
+# ---------------------------------------------------------------------------
+
+# leaves kept in full precision: norms, biases, gates'/decays' small tensors,
+# ddlerp/LoRA params, the MoE router (accuracy-critical — the same judgement
+# the paper applies keeping g_t's tanh range exact), depthwise conv.
+_QUANT_EXCLUDE_EXACT = frozenset(
+    {"u", "w0", "lam", "mu", "mu_x", "cm_mu_r", "cm_mu_k", "conv_w", "conv_b",
+     "ln_x", "router", "b", "b_a", "b_i"})
+_QUANT_EXCLUDE_PREFIX = ("ln", "b_", "bq", "bk", "bv", "lora", "wl_", "bias",
+                         "final_norm")
+
+
+def _quantizable(path: str, x) -> bool:
+    if not hasattr(x, "ndim") or x.ndim < 2:
+        return False
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return False
+    leaf = path.split("/")[-1]
+    if leaf in _QUANT_EXCLUDE_EXACT:
+        return False
+    return not any(leaf.startswith(e) for e in _QUANT_EXCLUDE_PREFIX)
+
+
+def quantize_model_params(params, axes, cfg: ModelConfig):
+    """Replace weight leaves with {"q": int8, "s": scale} (per-out-channel,
+    power-of-two scales — the paper's shift-requant, C1).  Returns (params,
+    axes) twin trees for serving."""
+
+    def walk(p, a, path=""):
+        if isinstance(p, dict):
+            pairs = {k: walk(p[k], a[k], f"{path}/{k}") for k in p}
+            return ({k: v[0] for k, v in pairs.items()},
+                    {k: v[1] for k, v in pairs.items()})
+        if isinstance(p, list):
+            pairs = [walk(x, y, f"{path}/{i}") for i, (x, y) in enumerate(zip(p, a))]
+            return [x for x, _ in pairs], [y for _, y in pairs]
+        if _quantizable(path, p):
+            # reduce over the CONTRACTION dim only: the first dim after any
+            # leading layer-stack/expert dims (linear() contracts w's first
+            # non-stacked dim).  Keeps per-layer / per-expert / per-output-
+            # channel scales — e.g. (L, d, H, hd) -> scale (L, 1, H, hd).
+            c = 0
+            while c < p.ndim - 1 and a[c] in ("layers", "experts"):
+                c += 1
+            red = (c,)
+            qt = quantize_tensor(p, axis=red, p2=cfg.quant.p2_scale)
+            s_axes = tuple(a[i] if i not in red else None
+                           for i in range(p.ndim))
+            return ({"q": qt.values, "s": qt.scale}, {"q": a, "s": s_axes})
+        return p, a
+
+    return walk(params, axes)

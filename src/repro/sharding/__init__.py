@@ -1,0 +1,4 @@
+from repro.sharding.partition import (  # noqa: F401
+    DEFAULT_RULES, constrain, logical_to_spec, param_shardings,
+    resolve_rules, rules_context,
+)

@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules — FSDP(data) × TP(model) × DP(pod).
+
+Parameters and activations are annotated with LOGICAL axis names; the rules
+below map them onto mesh axes (MaxText-style).  Uneven divisions (e.g. 12
+heads over 16-way TP) are legal — GSPMD pads — and the waste is visible in
+the roofline's useful-FLOPs ratio.
+
+``constrain`` is a contextvar-scoped ``with_sharding_constraint`` so model
+code can annotate activations without threading a mesh through every call
+(it is a no-op outside a rules context — e.g. single-device smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# TP width of the production mesh (launch/mesh.py); used for static layout
+# decisions that must be made where the mesh isn't in scope (cache specs).
+PRODUCTION_TP = 16
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),      # DP across pods, FSDP-data within
+    "seq": None,
+    "embed": ("data",),            # FSDP: shard the non-TP weight dim
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": None,               # TP-MoE default; EP overrides to model
+    "expert_mlp": ("model",),
+    "lru": ("model",),             # RG-LRU width
+    "heads_d": ("model",),         # rwkv fused heads*head_dim projection dim
+    "mlp2": ("model",),            # rwkv channel-mix receptance dim
+    "kv_seq": ("model",),          # decode KV-cache seq dim (sequence-
+                                   # parallel attention when kv_heads can't
+                                   # use the model axis)
+    "layers": None,
+    "act_embed": None,             # activation d_model dim
+    "act_heads": ("model",),       # activation heads dim
+}
+
+
+def resolve_rules(mesh: Mesh, overrides: Sequence[Tuple[str, Optional[str]]] = ()
+                  ) -> Dict[str, Optional[Tuple[str, ...]]]:
+    """Filter rules to the axes present in `mesh` and apply per-arch
+    overrides."""
+    rules = dict(DEFAULT_RULES)
+    for k, v in overrides:
+        rules[k] = (v,) if isinstance(v, str) else v
+    out = {}
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+            continue
+        axes = tuple(a for a in v if a in mesh.axis_names)
+        out[k] = axes if axes else None
+    return out
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...],
+                    rules: Dict[str, Optional[Tuple[str, ...]]],
+                    shape: Optional[Tuple[int, ...]] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Logical axes tuple -> PartitionSpec.
+
+    Guards: (1) a mesh axis is used at most once per spec (GSPMD rule);
+    (2) when `shape` is given, mesh axes that do not DIVIDE the dim are
+    dropped (JAX requires divisible explicit shardings — e.g. 8 KV heads
+    over 16-way TP, or batch=1 decode, fall back to replication; the
+    longest dividing PREFIX of the rule's axes is kept)."""
+    used = set()
+    parts = []
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a else None
+        if m:
+            m = tuple(x for x in m if x not in used)
+        if m and shape is not None and mesh is not None:
+            kept = []
+            prod = 1
+            for x in m:
+                prod *= mesh.shape[x]
+                if shape[i] % prod == 0:
+                    kept.append(x)
+                else:
+                    break
+            m = tuple(kept)
+        if m:
+            used.update(m)
+            parts.append(m if len(m) > 1 else m[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def param_shardings(axes_tree, mesh: Mesh, overrides=(), shapes_tree=None):
+    """axes tree (+ optional twin shapes tree for divisibility guards) ->
+    NamedSharding tree."""
+    rules = resolve_rules(mesh, overrides)
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, logical_to_spec(axes, rules)),
+            axes_tree, is_leaf=_is_axes_leaf)
+    return jax.tree.map(
+        lambda axes, s: NamedSharding(
+            mesh, logical_to_spec(axes, rules, tuple(s.shape), mesh)),
+        axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+
+
+# --- activation constraints (contextvar-scoped) -----------------------------
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar("partition_rules",
+                                                        default=None)
+
+
+@contextlib.contextmanager
+def rules_context(mesh: Mesh, overrides=()):
+    token = _RULES.set((mesh, resolve_rules(mesh, overrides)))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def constrain(x, *axes: Optional[str]):
+    """Annotate an activation with logical axes (no-op without rules).
+
+    Must be active while the step function is TRACED (lower()/first call)."""
+    ctx = _RULES.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(tuple(axes), rules, tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

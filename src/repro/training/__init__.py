@@ -1,0 +1,2 @@
+from repro.training.optimizer import OptConfig, init_opt_state, apply_updates  # noqa: F401
+from repro.training.step import TrainPlan, init_train_state, make_train_step  # noqa: F401

@@ -1,0 +1,87 @@
+"""Optimizers from scratch (no optax in this environment): AdamW + SGD with
+global-norm clipping and warmup-cosine schedule.  The optimizer state
+pytree mirrors the param tree, so it inherits the params' FSDPxTP sharding
+(sharded optimizer state — ZeRO-style — for free under pjit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_frac*lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    if cfg.name == "adamw":
+        return {"mu": zeros(), "nu": zeros(), "count": jnp.zeros((), jnp.int32)}
+    if cfg.name == "sgd":
+        return {"mu": zeros(), "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def apply_updates(params, grads, state: Dict[str, Any], cfg: OptConfig
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    if cfg.name == "adamw":
+        mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) *
+                          g.astype(m.dtype), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) *
+                          jnp.square(g.astype(v.dtype)), state["nu"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - cfg.b1 ** c
+        bc2 = 1 - cfg.b2 ** c
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(u.dtype)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": count}, \
+            {"lr": lr, "grad_norm": gnorm}
+    # sgd + momentum
+    mu = jax.tree.map(lambda m, g: 0.9 * m + g.astype(m.dtype),
+                      state["mu"], grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu)
+    return new_params, {"mu": mu, "count": count}, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,90 @@
+"""Property tests for the (a,b) fixed-point datapath (C1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixed_point as fxp
+from repro.core.fixed_point import (FXP_4_8, FXP_8_16, FixedPointConfig,
+                                    dequantize, fake_quant, quantize,
+                                    requantize)
+
+cfgs = st.sampled_from([FXP_4_8, FixedPointConfig(6, 8),
+                        FixedPointConfig(8, 10), FXP_8_16,
+                        FixedPointConfig(0, 8), FixedPointConfig(7, 8)])
+
+
+@given(cfgs, st.floats(-300, 300, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_quantize_roundtrip_error_bound(cfg, x):
+    """|dequant(quant(x)) - x| <= LSB/2 inside the representable range,
+    and clips to the range outside it."""
+    q = quantize(x, cfg)
+    assert cfg.int_min <= int(q) <= cfg.int_max
+    xd = float(dequantize(q, cfg))
+    if cfg.min_value <= x <= cfg.max_value:
+        assert abs(xd - x) <= cfg.scale / 2 + 1e-7
+    else:
+        assert xd in (pytest.approx(cfg.min_value), pytest.approx(cfg.max_value))
+
+
+@given(cfgs)
+@settings(max_examples=50, deadline=None)
+def test_quantize_is_monotonic(cfg):
+    xs = np.linspace(cfg.min_value * 1.5, cfg.max_value * 1.5, 301)
+    qs = np.asarray(quantize(jnp.asarray(xs), cfg))
+    assert (np.diff(qs) >= 0).all()
+
+
+@given(st.integers(-(2 ** 14), 2 ** 14), st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_round_shift_is_round_half_up(v, s):
+    got = int(fxp.round_shift_right(jnp.asarray(v), s))
+    want = int(np.floor(v / 2 ** s + 0.5))
+    assert got == want
+
+
+def test_requantize_matches_paper_example():
+    # (8,16) product -> (4,8): shift 4 with round-half-up, saturate.
+    v = jnp.asarray([0, 7, 8, -8, -9, 40000, -40000])
+    out = requantize(v, FXP_8_16, FXP_4_8)
+    assert out.tolist() == [0, 0, 1, 0, -1, 127, -128]
+
+
+@given(cfgs, st.integers(1, 24))
+@settings(max_examples=60, deadline=None)
+def test_late_rounding_at_least_as_accurate(cfg, n):
+    """Pipelined (late-rounding) MAC is never less accurate than the
+    per-step-rounding baseline — the paper's S5 design point."""
+    rng = np.random.default_rng(n)
+    x = rng.uniform(-1, 1, n).astype(np.float32)
+    w = rng.uniform(-1, 1, n).astype(np.float32)
+    xi = quantize(jnp.asarray(x), cfg)
+    wi = quantize(jnp.asarray(w), cfg)
+    exact = float(dequantize(xi, cfg) @ dequantize(wi, cfg))
+    late = float(dequantize(fxp.fxp_mac_late_rounding(xi, wi, cfg), cfg))
+    per = float(dequantize(fxp.fxp_mac_per_step_rounding(xi, wi, cfg), cfg))
+    exact_clip = np.clip(exact, cfg.min_value, cfg.max_value)
+    assert abs(late - exact_clip) <= abs(per - exact_clip) + cfg.scale + 1e-6
+
+
+def test_fake_quant_ste_gradient():
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, FXP_4_8)))(
+        jnp.asarray([0.3, -0.2, 100.0, -100.0]))
+    # identity gradient inside range, zero outside (saturation)
+    assert g.tolist() == [1.0, 1.0, 0.0, 0.0]
+
+
+def test_matvec_late_rounding_matches_manual():
+    cfg = FXP_4_8
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, (5, 7)).astype(np.int32)
+    w = rng.integers(-128, 128, (7, 3)).astype(np.int32)
+    b = rng.integers(-1000, 1000, (3,)).astype(np.int32)
+    got = np.asarray(fxp.fxp_matvec_late_rounding(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), cfg))
+    acc = x @ w + b
+    want = np.clip(np.floor(acc / 16 + 0.5), -128, 127)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,78 @@
+"""HardSigmoid*/HardTanh (C2): the paper's Table-1 structure facts and the
+three-method bit-identity."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hard_act as ha
+from repro.core.fixed_point import FXP_4_8, FXP_6_8, FXP_8_10, FixedPointConfig
+
+
+def test_paper_table_entry_counts():
+    """(4,8): 96 one-to-one entries and 14 step entries — §5.1."""
+    spec = ha.HardSigmoidStarSpec(FXP_4_8)
+    assert ha.num_1to1_entries(spec) == 96
+    assert ha.num_step_entries(spec) == 14
+
+
+specs = st.sampled_from([
+    ha.HardSigmoidStarSpec(FXP_4_8),
+    ha.HardSigmoidStarSpec(FXP_6_8),
+    ha.HardSigmoidStarSpec(FXP_8_10),
+    ha.HardSigmoidStarSpec(FixedPointConfig(5, 8), slope_shift=2),
+    ha.HardSigmoidStarSpec(FXP_4_8, slope_shift=4, bound=2.0),
+])
+
+
+@given(specs)
+@settings(max_examples=20, deadline=None)
+def test_three_methods_bit_identical(spec):
+    xs = jnp.arange(spec.cfg.int_min, spec.cfg.int_max + 1)
+    a = ha.hs_star_int(xs, spec, "arithmetic")
+    b = ha.hs_star_int(xs, spec, "1to1")
+    c = ha.hs_star_int(xs, spec, "step")
+    assert bool(jnp.all(a == b)) and bool(jnp.all(b == c))
+
+
+@given(specs)
+@settings(max_examples=20, deadline=None)
+def test_hs_star_monotone_and_bounded(spec):
+    xs = jnp.arange(spec.cfg.int_min, spec.cfg.int_max + 1)
+    y = np.asarray(ha.hs_star_int(xs, spec, "arithmetic"))
+    assert (np.diff(y) >= 0).all()
+    assert y.min() >= 0 and y.max() <= spec.one_int
+
+
+def test_int_matches_float_within_one_lsb():
+    spec = ha.HardSigmoidStarSpec(FXP_4_8)
+    cfg = spec.cfg
+    xs = jnp.arange(cfg.int_min, cfg.int_max + 1)
+    yi = np.asarray(ha.hs_star_int(xs, spec)) * cfg.scale
+    yf = np.asarray(ha.hard_sigmoid_star(xs * cfg.scale, 0.125, 3.0))
+    assert np.max(np.abs(yi - yf)) <= cfg.scale + 1e-7
+
+
+def test_hard_tanh_int_is_two_comparators():
+    cfg = FXP_4_8
+    xs = jnp.arange(cfg.int_min, cfg.int_max + 1)
+    y = np.asarray(ha.hard_tanh_int(xs, cfg))
+    assert y.min() == -16 and y.max() == 16   # +-1.0 at 4 fractional bits
+    mid = (xs >= -16) & (xs <= 16)
+    np.testing.assert_array_equal(y[np.asarray(mid)], np.asarray(xs)[np.asarray(mid)])
+
+
+def test_baseline_lut_sigmoid_256_entries():
+    """The baseline [15] uses a full 2^8-entry table."""
+    cfg = FXP_4_8
+    table = ha._lut_act_table_np("sigmoid", cfg)
+    assert len(table) == 256
+    y = np.asarray(ha.lut_sigmoid_int(jnp.arange(-128, 128), cfg)) * cfg.scale
+    xf = np.arange(-128, 128) * cfg.scale
+    assert np.max(np.abs(y - 1 / (1 + np.exp(-xf)))) <= cfg.scale / 2 + 1e-7
+
+
+def test_hard_variants_close_to_soft():
+    x = jnp.linspace(-4, 4, 201)
+    assert float(jnp.max(jnp.abs(ha.hard_silu(x) - x * (1 / (1 + jnp.exp(-x)))))) < 0.3
+    assert float(jnp.max(jnp.abs(ha.hard_sigmoid(x) - 1 / (1 + jnp.exp(-x))))) < 0.12

@@ -1,0 +1,185 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert exact equality against
+the pure-jnp oracles in kernels/ref.py (interpret=True executes the kernel
+body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.fixed_point import FXP_4_8, FXP_8_16, FixedPointConfig
+from repro.core.qlstm import ActivationConfig, QLSTMConfig
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand_lstm(T, B, M, H, cfg):
+    lo, hi = cfg.int_min, cfg.int_max + 1
+    x = RNG.integers(lo, hi, (T, B, M)).astype(np.int8 if cfg.total_bits <= 8
+                                               else np.int16)
+    wx = RNG.integers(lo // 4, hi // 4, (M, 4 * H)).astype(x.dtype)
+    wh = RNG.integers(lo // 8, hi // 8, (H, 4 * H)).astype(x.dtype)
+    b = RNG.integers(-200, 200, (4 * H,)).astype(np.int32)
+    return map(jnp.asarray, (x, wx, wh, b))
+
+
+@pytest.mark.parametrize("T,B,M,H", [(3, 2, 1, 4), (7, 13, 3, 20),
+                                     (6, 128, 1, 20), (2, 5, 10, 60),
+                                     (12, 1, 2, 8)])
+def test_qlstm_kernel_shapes(T, B, M, H):
+    cfg = FXP_4_8
+    x, wx, wh, b = _rand_lstm(T, B, M, H, cfg)
+    want = ref.qlstm_seq_ref(x, wx, wh, b, cfg)
+    model = QLSTMConfig(input_size=M, hidden_size=H, seq_len=T)
+    got = ops.qlstm_seq(x, wx, wh, b, model)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("unit", ["mxu", "vpu"])
+@pytest.mark.parametrize("method", ["arithmetic", "step"])
+def test_qlstm_kernel_units_and_methods(unit, method):
+    cfg = FXP_4_8
+    x, wx, wh, b = _rand_lstm(6, 9, 2, 16, cfg)
+    want = ref.qlstm_seq_ref(x, wx, wh, b, cfg)
+    model = QLSTMConfig(input_size=2, hidden_size=16, seq_len=6,
+                        acts=ActivationConfig(hs_method=method))
+    got = ops.qlstm_seq(x, wx, wh, b, model,
+                        AcceleratorConfig(compute_unit=unit, hs_method=method))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qlstm_kernel_int16_datapath():
+    """(8,16) — the baseline [15] width — through the same kernel."""
+    cfg = FXP_8_16
+    x, wx, wh, b = _rand_lstm(4, 3, 1, 8, cfg)
+    want = ref.qlstm_seq_ref(x, wx, wh, b, cfg)
+    model = QLSTMConfig(input_size=1, hidden_size=8, seq_len=4, fxp=cfg)
+    got = ops.qlstm_seq(x, wx, wh, b, model)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5),
+       st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_quant_matmul_property(mi, ki, ni, blocki):
+    m, k, n = mi * 13, ki * 17, ni * 11
+    block = [(16, 16, 16), (32, 16, 8), (128, 128, 128)][blocki]
+    x = RNG.integers(-128, 128, (m, k)).astype(np.int8)
+    w = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    got = ops.quant_matmul(jnp.asarray(x), jnp.asarray(w), block=block)
+    np.testing.assert_array_equal(
+        np.asarray(got), x.astype(np.int32) @ w.astype(np.int32))
+
+
+def test_quant_matmul_requant_fused():
+    cfg = FXP_4_8
+    x = RNG.integers(-128, 128, (50, 70)).astype(np.int8)
+    w = RNG.integers(-128, 128, (70, 90)).astype(np.int8)
+    got = ops.quant_matmul_requant(jnp.asarray(x), jnp.asarray(w), cfg,
+                                   block=(32, 32, 32))
+    want = ref.quant_matmul_requant_ref(jnp.asarray(x), jnp.asarray(w), cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("cfg", [FXP_4_8, FixedPointConfig(6, 8),
+                                 FixedPointConfig(8, 10), FXP_8_16])
+@pytest.mark.parametrize("method", ["arithmetic", "1to1", "step"])
+def test_hard_act_kernel_all_configs(cfg, method):
+    xs = jnp.arange(cfg.int_min, cfg.int_max + 1).reshape(-1, 16) \
+        .astype(cfg.storage_dtype)
+    got = ops.hard_sigmoid_star_int(xs, cfg, method=method)
+    want = ref.hard_act_ref(xs, cfg, method)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hard_tanh_kernel():
+    cfg = FXP_4_8
+    xs = jnp.arange(-128, 128).reshape(16, 16).astype(jnp.int8)
+    got = ops.hard_tanh_int(xs, cfg)
+    want = ref.hard_tanh_ref(xs, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,s,hd,causal,window", [
+    (64, 64, 32, True, None),
+    (64, 64, 32, False, None),
+    (96, 96, 16, True, 24),       # SWA
+    (40, 72, 32, False, None),    # padded, cross-attention shapes
+    (128, 128, 64, True, None),
+])
+def test_flash_attention_vs_ref(t, s, hd, causal, window):
+    if causal and t != s:
+        pytest.skip("causal requires t == s here")
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(0, 1, (3, t, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (3, s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (3, s, hd)).astype(np.float32))
+    from repro.kernels.flash_attention import flash_attention_pallas
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mha_flash_gqa_matches_model_attention():
+    """The Pallas kernel agrees with the model's chunked-jnp attention
+    (layers.flash_attention) — kernel and pure-JAX paths are interchangeable."""
+    from repro.models.layers import flash_attention as jnp_attn
+    rng = np.random.default_rng(8)
+    b, t, h, kv, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (b, t, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, t, kv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, t, kv, hd)).astype(np.float32))
+    got = ops.mha_flash(q, k, v, causal=True, scale=hd ** -0.5,
+                        block_q=16, block_k=16)
+    want = jnp_attn(q, k, v, causal=True, scale=hd ** -0.5,
+                    q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,bsz,w", [(5, 3, 8), (16, 7, 32), (9, 128, 16)])
+def test_rglru_kernel_vs_ref(t, bsz, w):
+    from repro.kernels.rglru_scan import rglru_seq_pallas
+    rng = np.random.default_rng(11)
+    log_a = jnp.asarray(-np.abs(rng.normal(0, 1, (t, bsz, w))).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (t, bsz, w)).astype(np.float32))
+    got = rglru_seq_pallas(log_a, b, batch_block=4)
+    want = ref.rglru_seq_ref(log_a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rglru_kernel_matches_model_recurrence():
+    """The fused kernel computes exactly the model's RG-LRU recurrence given
+    the model's own decays/inputs."""
+    from repro.kernels.rglru_scan import rglru_seq_pallas
+    from repro.models import rglru as RG
+    from repro.configs import ARCH_CONFIGS, reduce_config
+    from repro.models import transformer as TT
+    cfg = reduce_config(ARCH_CONFIGS["recurrentgemma-2b"])
+    p_full, _ = TT.init_model(cfg, jax.random.key(0))
+    p = jax.tree.map(lambda x: x[0], p_full["groups"][0]["mixer"])
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(0, 1, (3, 7, cfg.recurrent.lru_width))
+                    .astype(np.float32))
+    want = RG.rglru_scan(p, x, cfg)
+    a, mult, i = RG._decay(p, x, cfg)
+    log_a = jnp.log(jnp.maximum(a, 1e-30))
+    b = mult * (i * x)
+    got = rglru_seq_pallas(jnp.swapaxes(log_a, 0, 1), jnp.swapaxes(b, 0, 1))
+    np.testing.assert_allclose(np.asarray(jnp.swapaxes(got, 0, 1)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,73 @@
+"""Tensor-level int8 quantisation (C1 at LM scale) properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (NO_QUANT, W8, W8A8, QuantConfig, compute_scale,
+                              fq_matmul, qmatmul, quantize_kv,
+                              quantize_tensor, quantize_weight)
+
+
+@given(st.integers(0, 1000), st.floats(0.01, 1000.0))
+@settings(max_examples=100, deadline=None)
+def test_quantize_error_bound(seed, scale_mag):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(0, scale_mag, (32,))).astype(np.float32)
+    qt = quantize_tensor(jnp.asarray(x))
+    err = np.abs(np.asarray(qt.dequantize()) - x)
+    assert err.max() <= float(qt.scale) / 2 + 1e-6
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=50, deadline=None)
+def test_p2_scales_are_powers_of_two(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, rng.uniform(0.01, 100), (16, 8)).astype(np.float32)
+    s = float(compute_scale(jnp.asarray(x), p2=True))
+    assert s > 0 and abs(np.log2(s) - round(np.log2(s))) < 1e-6
+    # p2 rounding never clips: values stay within int8 after quantisation
+    qt = quantize_tensor(jnp.asarray(x), p2=True)
+    assert np.abs(np.asarray(qt.values)).max() <= 127
+
+
+def test_per_channel_weight_quant():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 1, (64, 32)).astype(np.float32)
+    w[:, 5] *= 100  # one hot channel shouldn't wreck the others
+    qt = quantize_weight(jnp.asarray(w), W8A8, out_axis=-1)
+    assert qt.scale.shape == (1, 32)
+    err = np.abs(np.asarray(qt.dequantize()) - w)
+    assert err[:, 0].max() < 0.02  # normal channel keeps fine resolution
+
+
+def test_qmatmul_close_to_float():
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (16, 64)).astype(np.float32)
+    w = rng.normal(0, 0.1, (64, 32)).astype(np.float32)
+    wq = quantize_weight(jnp.asarray(w), W8A8)
+    y8 = np.asarray(qmatmul(jnp.asarray(x), wq, W8A8))
+    yf = x @ w
+    rel = np.abs(y8 - yf).max() / (np.abs(yf).max() + 1e-9)
+    assert rel < 0.05
+
+
+def test_fq_matmul_gradients_flow():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (8, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (16, 4)).astype(np.float32))
+    g = jax.grad(lambda w: jnp.sum(fq_matmul(x, w, W8A8) ** 2))(w)
+    assert float(jnp.sum(jnp.abs(g))) > 0
+    # and the forward is close to float
+    err = jnp.max(jnp.abs(fq_matmul(x, w, W8A8) - x @ w))
+    assert float(err) < 0.2
+
+
+def test_kv_quantisation_roundtrip():
+    rng = np.random.default_rng(3)
+    kv = rng.normal(0, 1, (2, 10, 4, 16)).astype(np.float32)  # B,S,KV,hd
+    qt = quantize_kv(jnp.asarray(kv))
+    assert qt.values.dtype == jnp.int8
+    err = np.abs(np.asarray(qt.dequantize()) - kv)
+    assert err.max() < 0.05

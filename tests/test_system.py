@@ -1,0 +1,66 @@
+"""End-to-end behaviour: the paper's full pipeline (train -> QAT -> deploy
+on the integer accelerator) reaches the paper-band accuracy, and the serve
+launcher generates tokens."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accelerator import PAPER_DEFAULT
+from repro.core.qlstm import QLSTMConfig
+from repro.data.timeseries import pems_like_dataset
+from repro.models import lstm_model
+from repro.training.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+def test_e2e_qat_to_int8_deployment():
+    """Abbreviated §6.1: QAT training converges and the deployed int8
+    (Pallas-kernel) model matches QAT accuracy to <2x MSE."""
+    cfg = QLSTMConfig()
+    data = pems_like_dataset(seq_len=cfg.seq_len, n_days=10)
+    xtr, ytr = data["train"]
+    xte, yte = data["test"]
+    params = lstm_model.init_lstm_model(cfg, jax.random.key(0))[0]
+    oc = OptConfig(lr=5e-3, weight_decay=0.0, warmup_steps=5, total_steps=120)
+    opt = init_opt_state(params, oc)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        (l, _), g = jax.value_and_grad(
+            lambda p: lstm_model.loss_fn(p, {"x": x, "y": y}, cfg, "qat"),
+            has_aux=True)(params)
+        params, opt, _ = apply_updates(params, g, opt, oc)
+        return params, opt, l
+
+    rng = np.random.default_rng(0)
+    first = last = None
+    for i in range(120):
+        idx = rng.integers(0, len(xtr), 64)
+        params, opt, l = step(params, opt, jnp.asarray(xtr[idx]),
+                              jnp.asarray(ytr[idx]))
+        if i == 0:
+            first = float(l)
+        last = float(l)
+    assert last < first * 0.25, (first, last)
+
+    x = jnp.asarray(xte[:256])
+    y = jnp.asarray(yte[:256])
+    mse_qat = float(jnp.mean((lstm_model.forward(params, x, cfg, "qat") - y) ** 2))
+    mse_hw = float(jnp.mean(
+        (lstm_model.serve_int(params, x, cfg, PAPER_DEFAULT) - y) ** 2))
+    assert mse_qat < 0.05          # paper band (0.040 on real PeMS)
+    assert mse_hw < max(2 * mse_qat, 0.05)
+
+
+def test_serve_launcher_generates():
+    from repro.launch.serve import main
+    gen = main(["--arch", "qwen1.5-0.5b", "--batch", "2", "--gen", "4",
+                "--prompt-len", "3", "--max-seq", "16"])
+    assert gen.shape == (2, 4)
+
+
+def test_train_launcher_lm_smoke():
+    from repro.launch.train import main
+    out = main(["--arch", "qwen1.5-0.5b", "--steps", "3", "--batch", "4",
+                "--seq", "16"])
+    assert out["step"] == 3

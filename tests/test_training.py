@@ -1,0 +1,180 @@
+"""Training substrate: optimizer, checkpointing (atomic / async / keep-k /
+restart-bit-exactness), straggler watchdog, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_CONFIGS, reduce_config
+from repro.data.lm_data import SyntheticLM
+from repro.models import transformer as T
+from repro.training import checkpoint as ck
+from repro.training.compress import compress, init_error_state
+from repro.training.optimizer import (OptConfig, apply_updates,
+                                      init_opt_state, schedule)
+from repro.training.step import TrainPlan, init_train_state, make_train_step
+from repro.training.train_loop import LoopConfig, StragglerWatchdog, Trainer
+
+
+def test_adamw_minimises_quadratic():
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(150):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = apply_updates(params, g, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_schedule_warmup_cosine():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_grad_clip():
+    from repro.training.optimizer import clip_by_global_norm
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(5.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0)
+
+
+def _tiny_state():
+    cfg = reduce_config(ARCH_CONFIGS["qwen1.5-0.5b"])
+    params, _ = T.init_model(cfg, jax.random.key(0))
+    plan = TrainPlan(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=20),
+                     microbatches=2)
+    return cfg, plan, init_train_state(params, plan)
+
+
+def _batch(cfg, step, b=4, s=16):
+    src = SyntheticLM(cfg.vocab_size, seed=7)
+    d = src.batch(step, b, s)
+    return {"tokens": jnp.asarray(d["tokens"]), "labels": jnp.asarray(d["labels"])}
+
+
+def test_train_step_decreases_loss():
+    cfg, plan, state = _tiny_state()
+    step = jax.jit(make_train_step(cfg, plan), donate_argnums=0)
+    losses = []
+    for i in range(15):
+        state, m = step(state, _batch(cfg, i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert int(state["step"]) == 15
+
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    cfg, plan, state = _tiny_state()
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4):
+        ck.save(d, state, s, keep=2)
+    assert ck.latest_step(d) == 4
+    assert sorted(os.listdir(d)) == ["step_0000000003", "step_0000000004"]
+    restored = ck.restore(d, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restart_is_bit_exact(tmp_path):
+    """10 straight steps == 5 steps + checkpoint + restore + 5 steps, with
+    the step-keyed pipeline replaying identical batches."""
+    cfg, plan, state0 = _tiny_state()
+    step = jax.jit(make_train_step(cfg, plan))
+
+    state = state0
+    for i in range(10):
+        state, m = step(state, _batch(cfg, i))
+    full = state
+
+    state = state0
+    for i in range(5):
+        state, _ = step(state, _batch(cfg, i))
+    d = str(tmp_path / "ck")
+    ck.save(d, state, 5)
+    resumed = ck.restore(d, state)
+    for i in range(5, 10):
+        resumed, _ = step(resumed, _batch(cfg, i))
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpointer(tmp_path):
+    cfg, plan, state = _tiny_state()
+    d = str(tmp_path / "ck")
+    ac = ck.AsyncCheckpointer(d, keep=3)
+    ac.save_async(state, 7)
+    ac.wait()
+    assert ck.latest_step(d) == 7
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    cfg, plan, state = _tiny_state()
+    d = str(tmp_path / "ck")
+    ck.save(d, state, 1)
+    # tmp dirs never remain
+    assert not any(p.startswith("tmp.") for p in os.listdir(d))
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(factor=2.0, alpha=0.5)
+    for _ in range(5):
+        w.observe(0, 0.1)
+    assert not w.observe(6, 0.15)
+    assert w.observe(7, 0.5)          # 5x EMA -> straggler
+    assert len(w.events) == 1
+    # straggler must not poison the EMA
+    assert w.ema < 0.2
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    cfg, plan, state = _tiny_state()
+    step = jax.jit(make_train_step(cfg, plan))
+    tr = Trainer(step, state, lambda i: _batch(cfg, i),
+                 LoopConfig(total_steps=6, ckpt_dir=str(tmp_path / "ck"),
+                            ckpt_every=3, log_every=100),
+                 log=lambda s: None)
+    out = tr.run()
+    assert out["step"] == 6 and not out["preempted"]
+    assert ck.latest_step(str(tmp_path / "ck")) == 6
+    # resume path: a new trainer picks up from 6 and does nothing (total 6)
+    tr2 = Trainer(step, state, lambda i: _batch(cfg, i),
+                  LoopConfig(total_steps=6, ckpt_dir=str(tmp_path / "ck")),
+                  log=lambda s: None)
+    start = tr2.maybe_resume()
+    assert start == 6
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_gradient_compression(mode):
+    grads = {"w": jnp.asarray(np.random.default_rng(0)
+                              .normal(0, 1e-3, (64,)).astype(np.float32))}
+    err = init_error_state(grads)
+    out, err = compress(grads, mode, err)
+    g = jax.tree.leaves(out)[0]
+    if mode == "bf16":
+        assert g.dtype == jnp.bfloat16
+    rel = float(jnp.max(jnp.abs(g.astype(jnp.float32) - grads["w"]))) / 1e-3
+    assert rel < 0.1
+
+
+def test_int8_error_feedback_converges():
+    """Error feedback: the accumulated quantisation error stays bounded and
+    the running sum of compressed grads tracks the true sum."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros(16, np.float32)
+    comp_sum = np.zeros(16, np.float32)
+    grads = {"w": jnp.zeros(16)}
+    err = init_error_state(grads)
+    for i in range(50):
+        g = rng.normal(0, 1e-2, 16).astype(np.float32)
+        true_sum += g
+        out, err = compress({"w": jnp.asarray(g)}, "int8", err)
+        comp_sum += np.asarray(jax.tree.leaves(out)[0])
+    resid = np.abs(np.asarray(err["w"]))
+    assert np.abs(comp_sum - true_sum).max() <= resid.max() + 1e-5
