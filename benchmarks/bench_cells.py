@@ -1,9 +1,22 @@
-"""Beyond-paper: the 40-cell roofline table as a benchmark surface.
+"""Beyond-paper: configuration cells as a benchmark surface.
 
-Reads results/dryrun.json (produced by the multi-pod dry-run sweep) and
-emits each single-pod cell's roofline-projected step time and the dominant
-term — the §Roofline deliverable in CSV form.  `us_per_call` is the
-projected TPU step latency; `derived` is the useful-FLOPs ratio.
+Two families of rows:
+
+  * ``cell_lstm_*`` — the paper's Table-2 configuration grid walked
+    through the session API (``repro.build(...).report()``): compute unit
+    x HardSigmoid* method x ALU mode x fixed-point format.  No timing —
+    these are analytical plan/energy cells, cheap enough for --smoke —
+    so ``us_per_call`` is 0.0 (keeping that column microseconds-only for
+    trend tooling) and ``derived`` is the projected dynamic power in mW at
+    the paper's operating point — the energy-model output that actually
+    varies across the grid (GOP/s/W is swamped by static power at this
+    model size; the hs/alu axes don't enter the analytic energy model, so
+    those cells legitimately repeat).  Weight bytes are recoverable from
+    the name's ``a<frac>b<total>`` fixed-point tag.
+  * ``cell_<arch>_*`` — the 40-cell LM roofline table read from
+    results/dryrun.json (produced by the multi-pod dry-run sweep);
+    ``us_per_call`` is the roofline-projected TPU step latency, ``derived``
+    the useful-FLOPs ratio.
 """
 
 import json
@@ -12,10 +25,34 @@ import os
 RESULTS = os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json")
 
 
-def run():
+def _lstm_grid_rows():
+    import repro
+    from repro.core.accelerator import AcceleratorConfig
+    from repro.core.fixed_point import FXP_4_8, FXP_8_16
+    from repro.core.qlstm import QLSTMConfig
+
     rows = []
+    model = QLSTMConfig()
+    for unit in ("mxu", "vpu"):
+        for alu in ("pipelined", "per_step"):
+            for hs in ("arithmetic", "1to1", "step"):
+                for fxp in (FXP_4_8, FXP_8_16):
+                    acc = AcceleratorConfig(compute_unit=unit, alu_mode=alu,
+                                            hs_method=hs, fxp=fxp)
+                    rep = repro.build(model, acc).report()
+                    name = (f"cell_lstm_{unit}_{alu}_{hs}_"
+                            f"a{fxp.frac_bits}b{fxp.total_bits}_"
+                            f"{rep['backend']}")
+                    rows.append((name, 0.0,
+                                 round(rep["energy"]["dynamic_w"] * 1e3, 4)))
+    return rows
+
+
+def run():
+    rows = _lstm_grid_rows()
     if not os.path.exists(RESULTS):
-        return [("cells_missing_run_dryrun_first", 0.0, 0)]
+        rows.append(("cells_missing_run_dryrun_first", 0.0, 0))
+        return rows
     with open(RESULTS) as f:
         rs = json.load(f)
     for r in rs:

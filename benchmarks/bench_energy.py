@@ -1,8 +1,9 @@
 """Table 4: power & energy efficiency comparison.
 
-Reproduces the structure of the paper's Table 4 with the TPU energy model
-(core/energy.py): static/dynamic power split, energy per inference,
-throughput and GOP/s/W, for:
+Reproduces the structure of the paper's Table 4 through
+``Accelerator.report()`` (the TPU energy model, core/energy.py):
+static/dynamic power split, energy per inference, throughput and GOP/s/W,
+for:
   (a) the [15]-baseline datapath ((8,16), LUT acts, non-pipelined),
   (b) this-work on the MXU ('8 DSPs' column),
   (c) this-work on the VPU ('0 DSPs' column — the paper's headline option).
@@ -12,42 +13,37 @@ energy story matches Table 3/4 while absolute watts come from the TPU
 model.  `derived` = GOP/s/W.
 """
 
+import repro
+from repro.api import PAPER_LATENCY_S
 from repro.core.accelerator import (AcceleratorConfig, BASELINE_15,
-                                    PAPER_DEFAULT, PAPER_NO_MXU, plan)
-from repro.core.energy import power_report
-from repro.core.qlstm import QLSTMConfig, ops_per_inference
+                                    PAPER_DEFAULT, PAPER_NO_MXU)
+from repro.core.fixed_point import FXP_8_16
+from repro.core.qlstm import BASELINE_ACTS, QLSTMConfig
 from benchmarks.bench_throughput import _mk, _time
 
 
 def run():
-    cfgs = {
-        "t4_baseline15": (BASELINE_15, None),
-        "t4_thiswork_mxu": (PAPER_DEFAULT, "mxu"),
-        "t4_thiswork_vpu": (PAPER_NO_MXU, "vpu"),
-    }
     model = QLSTMConfig()
-    ops = ops_per_inference(model)
+    cfgs = {
+        "t4_baseline15": (QLSTMConfig(acts=BASELINE_ACTS), BASELINE_15),
+        "t4_thiswork_mxu": (model, PAPER_DEFAULT),
+        "t4_thiswork_vpu": (model, PAPER_NO_MXU),
+    }
 
     # measured relative latency (CPU, XLA-compiled): baseline vs this-work
-    from repro.core.qlstm import ActivationConfig, BASELINE_ACTS
-    from repro.core.fixed_point import FXP_8_16
-    fn_b, xi_b = _mk(QLSTMConfig(acts=BASELINE_ACTS, fxp=FXP_8_16,
-                                 alu_mode="per_step"))
-    fn_t, xi_t = _mk(QLSTMConfig())
-    rel = _time(fn_b, xi_b) / _time(fn_t, xi_t)
+    fn_b, x_b = _mk(QLSTMConfig(acts=BASELINE_ACTS),
+                    AcceleratorConfig(fxp=FXP_8_16, alu_mode="per_step",
+                                      hs_method="1to1"))
+    fn_t, x_t = _mk(model, PAPER_DEFAULT)
+    rel = _time(fn_b, x_b) / _time(fn_t, x_t)
 
-    lat_tw = 28.07e-6                       # paper's this-work latency
-    lat_by_name = {"t4_baseline15": lat_tw * rel,
-                   "t4_thiswork_mxu": lat_tw,
-                   "t4_thiswork_vpu": lat_tw}
+    lat_by_name = {"t4_baseline15": PAPER_LATENCY_S * rel,
+                   "t4_thiswork_mxu": PAPER_LATENCY_S,
+                   "t4_thiswork_vpu": PAPER_LATENCY_S}
     rows = []
-    for name, (acc, unit) in cfgs.items():
-        p = plan(model, acc)
+    for name, (mcfg, acfg) in cfgs.items():
         lat = lat_by_name[name]
-        rep = power_report(flops=ops, hbm_bytes=p["weight_bytes"],
-                           ici_bytes=0, latency_s=lat,
-                           unit=p["compute_unit"],
-                           dtype="int8" if acc.fxp.total_bits <= 8 else "bf16")
+        rep = repro.build(mcfg, acfg).report(latency_s=lat)["energy"]
         rows.append((name + "_gops_per_w", lat * 1e6,
                      round(rep["gops_per_watt"], 4)))
         rows.append((name + "_energy_uj", lat * 1e6,

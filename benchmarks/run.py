@@ -1,14 +1,65 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [table1 table3 table4 fig45 cells]
+  PYTHONPATH=src python -m benchmarks.run --smoke [out.json]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+
+``--smoke`` runs a fast subset — the analytical accelerator-grid cells
+plus one timed int-datapath measurement per backend through the session
+API — and writes it to ``BENCH_smoke.json`` (override with a positional
+path) so CI records the perf trajectory.
 """
 
+import json
 import sys
+import time
+
+
+def _smoke_rows():
+    """Cheap, deterministic-shape rows: plan/energy grid + one timed call
+    per backend (small batch so CPU interpret mode stays fast)."""
+    import jax
+    import repro
+    from benchmarks import bench_cells
+
+    rows = list(bench_cells._lstm_grid_rows())
+
+    sess = repro.build().quantize()
+    x = jax.random.normal(jax.random.key(0), (32, 6, 1)) * 0.5
+    for backend in ("ref", "pallas", "xla"):
+        fn = sess.compiled("int", backend)
+        fn(x).block_until_ready()           # compile outside the clock
+        t0 = time.perf_counter()
+        iters = 5
+        for _ in range(iters):
+            out = fn(x)
+        out.block_until_ready()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append((f"smoke_int_b32_{backend}", round(us, 2), 32))
+    return rows
+
+
+def smoke(out_path: str = "BENCH_smoke.json") -> None:
+    rows = _smoke_rows()
+    payload = {
+        "suite": "smoke",
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print("name,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.2f},{d}")
+    print(f"[smoke] wrote {len(rows)} rows to {out_path}", file=sys.stderr)
 
 
 def main() -> None:
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--smoke":
+        smoke(*argv[1:2])
+        return
     from benchmarks import (bench_activations, bench_cells, bench_energy,
                             bench_resources, bench_throughput)
     suites = {
@@ -18,7 +69,7 @@ def main() -> None:
         "fig45": bench_resources.run,
         "cells": bench_cells.run,
     }
-    want = sys.argv[1:] or list(suites)
+    want = argv or list(suites)
     print("name,us_per_call,derived")
     for key in want:
         for name, us, derived in suites[key]():

@@ -1,64 +1,44 @@
-"""Quickstart: the paper's pipeline end to end in ~a minute on CPU.
+"""Quickstart: the paper's pipeline end to end in ~a minute on CPU —
+through the unified session API (docs/API.md).
 
-1. Build the paper's LSTM model (hidden 20, (4,8) fixed point, HardSigmoid*
-   'step' + HardTanh).
-2. QAT-train briefly on synthetic PeMS-like traffic data.
-3. Quantise and run the deployment path — the fused Pallas kernel
-   (interpret mode on CPU) — and check it matches the QAT model.
-4. Print the Table-2 accelerator plan and the Table-4-style energy report.
+1. ``repro.build`` the paper's accelerator (hidden 20, (4,8) fixed point,
+   HardSigmoid* 'step' + HardTanh, pipelined ALU on the MXU).
+2. ``train_qat`` briefly on synthetic PeMS-like traffic data.
+3. ``quantize`` and run the deployment path — the plan selects the fused
+   Pallas kernel (interpret mode on CPU) — and check it matches QAT and is
+   bit-identical across every backend engine.
+4. ``report()`` the Table-2 accelerator plan and Table-4-style energy.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 
-from repro.core import fixed_point as fxp
-from repro.core.accelerator import AcceleratorConfig, PAPER_DEFAULT, plan
-from repro.core.energy import power_report
-from repro.core.qlstm import QLSTMConfig, ops_per_inference
+import repro
+from repro.core.accelerator import PAPER_DEFAULT
+from repro.core.qlstm import QLSTMConfig
 from repro.data.timeseries import pems_like_dataset
-from repro.models import lstm_model
-from repro.training.optimizer import OptConfig, apply_updates, init_opt_state
 
 cfg = QLSTMConfig()  # the paper's model
 data = pems_like_dataset(seq_len=cfg.seq_len)
-xtr, ytr = data["train"]
 xte, yte = data["test"]
 
-params = lstm_model.init_lstm_model(cfg, jax.random.key(0))[0]
-opt_cfg = OptConfig(lr=3e-3, weight_decay=0.0, warmup_steps=10, total_steps=150)
-opt = init_opt_state(params, opt_cfg)
-
-
-@jax.jit
-def step(params, opt, x, y):
-    (l, _), g = jax.value_and_grad(
-        lambda p: lstm_model.loss_fn(p, {"x": x, "y": y}, cfg, "qat"),
-        has_aux=True)(params)
-    params, opt, _ = apply_updates(params, g, opt, opt_cfg)
-    return params, opt, l
-
-
-import numpy as np
-rng = np.random.default_rng(0)
-for i in range(150):
-    idx = rng.integers(0, len(xtr), 64)
-    params, opt, l = step(params, opt, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
-    if i % 50 == 0:
-        print(f"step {i:4d}  QAT loss {float(l):.5f}")
+acc = repro.build(cfg, PAPER_DEFAULT, seed=0)
+acc.train_qat(data, steps=150, batch=64, lr=3e-3).quantize()
 
 x = jnp.asarray(xte[:512])
 y = jnp.asarray(yte[:512])
-mse_qat = float(jnp.mean((lstm_model.forward(params, x, cfg, 'qat') - y) ** 2))
-pred_hw = lstm_model.serve_int(params, x, cfg, PAPER_DEFAULT)   # Pallas kernel
+mse_qat = float(jnp.mean((acc.infer(x, path="qat") - y) ** 2))
+pred_hw = acc.infer(x, path="int")            # plan-selected Pallas kernel
 mse_hw = float(jnp.mean((pred_hw - y) ** 2))
 print(f"\ntest MSE: QAT={mse_qat:.5f}  int8-accelerator={mse_hw:.5f} "
       f"(paper reports 0.040 on real PeMS-4W)")
 
-p = plan(cfg, PAPER_DEFAULT)
-print("\nAccelerator plan (Table 2 -> TPU):", p)
-ops = ops_per_inference(cfg)
-lat = 28.07e-6  # paper latency; energy model maps it to TPU terms
-print("Energy report (Table-4 analogue):",
-      power_report(flops=ops, hbm_bytes=p['weight_bytes'], ici_bytes=0,
-                   latency_s=lat, dtype='int8'))
+# Every execution engine produces the SAME integer codes (the paper's
+# point: one parameterised design, many implementations).
+for backend in ("ref", "pallas", "xla"):
+    same = bool(jnp.all(acc.infer(x, path="int", backend=backend) == pred_hw))
+    print(f"  backend {backend:6s}: bit-identical = {same}")
+
+rep = acc.report()
+print("\nAccelerator plan (Table 2 -> TPU):", rep["plan"])
+print("Energy report (Table-4 analogue):", rep["energy"])

@@ -1,50 +1,48 @@
 """Real-time LSTM inference — the paper's deployment scenario (§6: 32873
-samples/s on the XC7S15 at 204 MHz).
+samples/s on the XC7S15 at 204 MHz) — through ``Accelerator.serve``.
 
-Streams batched windows through the int8 accelerator datapath (fused Pallas
-kernel in interpret mode on CPU) and reports samples/s plus the projected
-TPU-side GOP/s and GOP/s/W from the energy model.
+Streams windows through the int8 accelerator datapath in fixed-size waves
+(the jitted engine sees one static shape) and reports samples/s plus the
+projected TPU-side GOP/s and GOP/s/W from the energy model.
 
 Run:  PYTHONPATH=src python examples/serve_lstm_realtime.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.accelerator import PAPER_DEFAULT, PAPER_NO_MXU, plan
-from repro.core.energy import power_report
-from repro.core.qlstm import QLSTMConfig, ops_per_inference
+import repro
+from repro.core.accelerator import PAPER_DEFAULT, PAPER_NO_MXU
+from repro.core.qlstm import QLSTMConfig
 from repro.data.timeseries import pems_like_dataset
-from repro.models import lstm_model
 
 cfg = QLSTMConfig()
 data = pems_like_dataset(seq_len=cfg.seq_len)
 x, y = data["test"]
-params = lstm_model.init_lstm_model(cfg, jax.random.key(0))[0]
+
+acc = repro.build(cfg, PAPER_DEFAULT, seed=0)
+acc.train_qat(data, steps=200, log_every=100).quantize()
 
 BATCH = 256
-serve = jax.jit(lambda xb: lstm_model.serve_int(params, xb, cfg, PAPER_DEFAULT))
-xb = jnp.asarray(x[:BATCH])
-serve(xb).block_until_ready()  # compile
+# Whole waves only, within the test set: no final-wave padding in the clock.
+N = (min(BATCH * 20, len(x)) // BATCH) * BATCH
+# Warm-up wave compiles the serving datapath once.
+next(acc.serve(iter(x[:BATCH]), batch=BATCH))
 
-n_batches = 20
 t0 = time.perf_counter()
-for i in range(n_batches):
-    serve(xb).block_until_ready()
+preds = list(acc.serve(iter(x[:N]), batch=BATCH))
 dt = time.perf_counter() - t0
-sps = BATCH * n_batches / dt
-ops = ops_per_inference(cfg)
-print(f"[serve] {BATCH*n_batches} samples in {dt:.2f}s = {sps:,.0f} samples/s "
+sps = len(preds) / dt
+ops = acc.report()["ops_per_inference"]
+print(f"[serve] {len(preds)} samples in {dt:.2f}s = {sps:,.0f} samples/s "
       f"(CPU interpret mode; paper: 32,873 samples/s on FPGA)")
 print(f"[serve] equivalent GOP/s at this rate: {sps*ops/1e9:.3f}")
+print(f"[serve] stream MSE vs targets: "
+      f"{float(np.mean((np.stack(preds) - y[:N]) ** 2)):.5f}")
 
-for name, acc in [("mxu (DSP)", PAPER_DEFAULT), ("vpu (no-DSP)", PAPER_NO_MXU)]:
-    p = plan(cfg, acc)
+for name, accel in [("mxu (DSP)", PAPER_DEFAULT), ("vpu (no-DSP)", PAPER_NO_MXU)]:
     # project: TPU latency bound by weight streaming + compute at unit peak
-    rep = power_report(flops=ops * BATCH, hbm_bytes=p["weight_bytes"],
-                       ici_bytes=0, latency_s=BATCH / 32873.0,
-                       unit=p["compute_unit"], dtype="int8")
+    rep = repro.build(cfg, accel).report(latency_s=BATCH / 32873.0,
+                                         batch=BATCH)["energy"]
     print(f"[energy/{name:12s}] GOP/s/W={rep['gops_per_watt']:.2f} "
           f"total_W={rep['total_w']:.1f} (paper: 11.89 GOP/s/W)")

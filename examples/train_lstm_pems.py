@@ -1,10 +1,10 @@
 """The paper's §6.1 experiment, end to end (e2e training driver).
 
-Trains the LSTM+dense model with Quantisation-Aware Training on PeMS-like
-traffic data, then reports MSE for: float / QAT / the bit-exact int8
-accelerator datapath (fused Pallas kernel).  Checkpoints land in
-/tmp/repro_lstm_ckpt — rerun to resume; Ctrl-C checkpoints-and-exits
-(the fault-tolerance contract).
+Drives the session API (``repro.build`` -> ``train_qat`` -> ``quantize``
+-> ``infer``; docs/API.md) via ``launch/train.py``: QAT on PeMS-like
+traffic data, then MSE for float / QAT / the bit-exact int8 accelerator
+datapath.  Checkpoints land in /tmp/repro_lstm_ckpt — rerun to resume;
+Ctrl-C checkpoints-and-exits (the fault-tolerance contract).
 
 Run:  PYTHONPATH=src python examples/train_lstm_pems.py [--steps 400]
 """

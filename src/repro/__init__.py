@@ -2,5 +2,14 @@
 
 Reproduction & TPU scale-out of 'Energy Efficient LSTM Accelerators for
 Embedded FPGAs through Parameterised Architecture Design'.  See DESIGN.md.
+
+The front door is the session API (docs/API.md)::
+
+    import repro
+    acc = repro.build(model_cfg, accel_cfg)   # Table-2 parameters in
+    acc.train_qat(data).quantize()            # QAT -> integer codes
+    y = acc.infer(x, path="int")              # bit-exact datapath out
 """
-__version__ = "0.1.0"
+from repro.api import Accelerator, build  # noqa: F401
+
+__version__ = "0.2.0"

@@ -1,0 +1,303 @@
+"""The unified accelerator session API — ``repro.build``.
+
+One configuration, compiled once, deployed everywhere (the paper's thesis:
+a single *parameterised* design covers many deployment situations):
+
+    import repro
+    from repro.core.qlstm import QLSTMConfig
+    from repro.core.accelerator import AcceleratorConfig
+
+    acc = repro.build(QLSTMConfig(), AcceleratorConfig())
+    acc.train_qat(data, steps=400)          # QAT (§6.1)
+    acc.quantize()                          # float master -> integer codes
+    y = acc.infer(x, path="int")            # bit-exact accelerator datapath
+    for pred in acc.serve(stream, batch=256):
+        ...                                 # batched real-time serving (§6)
+    acc.report()                            # Table-2 plan + Table-4 energy
+
+The session owns the float master params, the quantised params, and the
+resolved ``plan()``; ``infer``/``serve`` dispatch through the backend
+registry (`repro/backends/`: ``ref`` oracle | fused ``pallas`` kernel |
+``xla`` scan) selected by the plan, with explicit override.  Jitted
+entry points are cached per (path, backend) so repeated calls — the
+serving hot path — never retrace.
+
+See docs/API.md for the full lifecycle and the Table-2 parameter mapping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Iterator, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import backends
+from repro.core import fixed_point as fxp
+from repro.core.accelerator import (AcceleratorConfig, plan as resolve_plan,
+                                    resolve_model, sync_accelerator)
+from repro.core.energy import power_report
+from repro.core.qlstm import (QLSTMConfig, forward_float, forward_qat,
+                              init_params, ops_per_inference, quantize_params)
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+PATHS = ("float", "qat", "int")
+
+# The paper's measured operating point (§6: 28.07 us/inference on the
+# XC7S15) — the default latency anchor for report().
+PAPER_LATENCY_S = 28.07e-6
+
+
+def build(model: Optional[QLSTMConfig] = None,
+          accel: Optional[AcceleratorConfig] = None, *,
+          params: Optional[Params] = None, seed: int = 0) -> "Accelerator":
+    """Compile a (model, accelerator) configuration into a session.
+
+    This is the single entry point of the pipeline: Table-2 meta-parameters
+    in, a deployable object out.  ``params`` seeds the session with
+    existing float master weights; otherwise they are initialised from
+    ``seed``."""
+    return Accelerator(model or QLSTMConfig(), accel or AcceleratorConfig(),
+                       params=params, seed=seed)
+
+
+class Accelerator:
+    """A built accelerator: params + resolved plan + dispatchable datapaths.
+
+    Lifecycle: ``build`` -> ``train_qat`` -> ``quantize`` -> ``infer`` /
+    ``serve`` / ``report``.  Stage methods return ``self`` for chaining."""
+
+    def __init__(self, model: QLSTMConfig, accel: AcceleratorConfig, *,
+                 params: Optional[Params] = None, seed: int = 0):
+        # Canonicalise both directions once: AcceleratorConfig is the source
+        # of truth; legacy model-side knobs are honoured with a warning.
+        self.model = resolve_model(model, accel)
+        self.accel = sync_accelerator(self.model, accel)
+        self.plan = resolve_plan(self.model, self.accel)
+        if self.accel.backend != "auto":
+            # Fail at build, not first infer: an explicit engine that cannot
+            # run this configuration would otherwise be reported by plan()/
+            # report() as if it could.
+            backends.select(self.model, self.accel)
+        self.params: Params = (params if params is not None
+                               else init_params(self.model,
+                                                jax.random.key(seed)))
+        self.qparams: Optional[Params] = None
+        self.train_summary: Optional[Dict[str, Any]] = None
+        self._jitted: Dict[Tuple[str, str], Any] = {}
+
+    # -- training -----------------------------------------------------------
+
+    def train_qat(self, data, steps: int = 200, *, batch: int = 64,
+                  lr: float = 3e-3, seed: int = 0,
+                  ckpt_dir: Optional[str] = None, log_every: int = 50,
+                  log=print) -> "Accelerator":
+        """Quantisation-aware training (§6.1): MSE regression with STE
+        fake-quant at every hardware rounding point.
+
+        ``data``: either the dict from ``data.timeseries.pems_like_dataset``
+        (its ``"train"`` split is used) or an ``(x, y)`` tuple with
+        x (N, T, M) float and y (N, P).  Fault tolerance comes from the
+        shared ``Trainer`` (checkpoint/resume in ``ckpt_dir``,
+        SIGTERM/SIGINT checkpoint-and-exit)."""
+        from repro.training.optimizer import (OptConfig, apply_updates,
+                                              init_opt_state)
+        from repro.training.train_loop import LoopConfig, Trainer
+
+        xtr, ytr = data["train"] if isinstance(data, dict) else data
+        cfg = self.model
+        opt_cfg = OptConfig(name="adamw", lr=lr, weight_decay=0.0,
+                            warmup_steps=min(20, max(1, steps // 10)),
+                            total_steps=steps)
+        state = {"params": self.params,
+                 "opt": init_opt_state(self.params, opt_cfg),
+                 "step": jnp.zeros((), jnp.int32)}
+
+        @jax.jit
+        def step_fn(state, batch_d):
+            def loss(p):
+                y = forward_qat(p, batch_d["x"], cfg)
+                mse = jnp.mean(jnp.square(y - batch_d["y"]))
+                return mse, {"mse": mse}
+
+            (l, m), g = jax.value_and_grad(loss, has_aux=True)(state["params"])
+            p, o, om = apply_updates(state["params"], g, state["opt"], opt_cfg)
+            return ({"params": p, "opt": o, "step": state["step"] + 1},
+                    {"loss": l, **m, **om})
+
+        def batch_fn(step):
+            rng = np.random.default_rng((seed, step))
+            idx = rng.integers(0, len(xtr), batch)
+            return {"x": jnp.asarray(xtr[idx]), "y": jnp.asarray(ytr[idx])}
+
+        trainer = Trainer(step_fn, state, batch_fn,
+                          LoopConfig(total_steps=steps, ckpt_dir=ckpt_dir,
+                                     ckpt_every=100, log_every=log_every),
+                          log=log)
+        trainer.maybe_resume()
+        self.train_summary = trainer.run()
+        self.params = trainer.state["params"]
+        # Params changed: stale quantisation and jit closures must go.
+        self.qparams = None
+        self._jitted.clear()
+        return self
+
+    # -- quantisation -------------------------------------------------------
+
+    def quantize(self) -> "Accelerator":
+        """Float master weights -> integer codes for the hardware datapath
+        (weights in (a,b); biases at the wide accumulator precision)."""
+        self.qparams = quantize_params(self.params, self.model)
+        # Cached int-path closures captured the previous codes; drop them.
+        self._jitted = {k: fn for k, fn in self._jitted.items()
+                        if k[0] != "int"}
+        return self
+
+    # -- inference ----------------------------------------------------------
+
+    def infer(self, x: Union[Array, np.ndarray], path: str = "float",
+              backend: Optional[str] = None) -> Array:
+        """x: (B, T, M) float -> (B, P) float.
+
+        ``path``: ``float`` (training semantics), ``qat`` (fake-quant
+        graph), ``int`` (bit-exact integer datapath — dequantised at the
+        boundary).  ``backend`` overrides the plan's engine for the int
+        path (``ref`` | ``pallas`` | ``xla``)."""
+        return self._fn(path, backend)(jnp.asarray(x))
+
+    def infer_int(self, x_int: Union[Array, np.ndarray],
+                  backend: Optional[str] = None) -> Array:
+        """Integer codes in, integer codes out — the raw accelerator
+        boundary, for bit-exactness checks and benchmarks."""
+        self._require_quantized()
+        bk = backends.select(self.model, self.accel, override=backend)
+        return bk.run(self.qparams, jnp.asarray(x_int), self.model, self.accel)
+
+    def compiled(self, path: str = "int", backend: Optional[str] = None):
+        """The cached jitted entry point for (path, backend): a callable
+        ``(B, T, M) float -> (B, P) float``.  Useful for benchmarking the
+        datapath without per-call dispatch overhead."""
+        return self._fn(path, backend)
+
+    def _require_quantized(self):
+        if self.qparams is None:
+            raise RuntimeError(
+                "the session is not quantised: call .quantize() before the "
+                "int path (build -> train_qat -> quantize -> infer/serve)")
+
+    def _fn(self, path: str, backend: Optional[str]):
+        """Cached jitted entry point for (path, backend)."""
+        if path not in PATHS:
+            raise ValueError(f"path must be one of {PATHS}, got {path!r}")
+        if backend is not None and path != "int":
+            raise ValueError(
+                f"backend={backend!r} only applies to path='int'; the "
+                f"{path!r} path runs the float graph")
+        model = self.model
+        if path == "int":
+            self._require_quantized()
+            # Key on the RESOLVED engine: plan-auto and an explicit request
+            # for the same engine share one compiled closure.
+            bk = backends.select(model, self.accel, override=backend)
+            key = (path, bk.name)
+        else:
+            key = (path, "plan")
+        if key in self._jitted:
+            return self._jitted[key]
+
+        if path == "float":
+            params = self.params
+            fn = jax.jit(lambda x: forward_float(params, x, model))
+        elif path == "qat":
+            params = self.params
+            fn = jax.jit(lambda x: forward_qat(params, x, model))
+        else:
+            qparams, accel = self.qparams, self.accel
+
+            def int_path(x):
+                x_int = fxp.quantize(x, model.fxp)
+                y_int = bk.run(qparams, x_int, model, accel)
+                return fxp.dequantize(y_int, model.fxp)
+
+            fn = jax.jit(int_path)
+        self._jitted[key] = fn
+        return fn
+
+    # -- serving ------------------------------------------------------------
+
+    def serve(self, stream: Iterable[Union[Array, np.ndarray]],
+              batch: int = 256, path: str = "int",
+              backend: Optional[str] = None) -> Iterator[np.ndarray]:
+        """Batched streaming inference — the paper's deployment scenario
+        (§6: real-time samples/s).
+
+        ``stream`` yields windows of shape (T, M); predictions of shape
+        (P,) are yielded in order.  Windows are assembled into fixed-size
+        waves of ``batch`` (the final partial wave is padded, padding
+        discarded), so the jitted datapath sees one static shape."""
+        # Validate NOW, not at first iteration: serve() itself is a plain
+        # function so a bad path/backend or an unquantised session fails at
+        # the call site, not deep inside whatever consumes the generator.
+        fn = self._fn(path, backend)
+
+        def waves():
+            buf: list = []
+
+            def flush():
+                n = len(buf)
+                wave = np.stack(buf, axis=0)
+                if n < batch:  # pad the last partial wave to the static shape
+                    pad = np.repeat(wave[-1:], batch - n, axis=0)
+                    wave = np.concatenate([wave, pad], axis=0)
+                y = np.asarray(fn(jnp.asarray(wave)))
+                buf.clear()
+                for i in range(n):
+                    yield y[i]
+
+            for w in stream:
+                buf.append(np.asarray(w))
+                if len(buf) == batch:
+                    yield from flush()
+            if buf:
+                yield from flush()
+
+        return waves()
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self, latency_s: float = PAPER_LATENCY_S,
+               batch: int = 1) -> Dict[str, Any]:
+        """Resolved plan + op/footprint accounting + the Table-4-style
+        energy report at the given operating point."""
+        ops = ops_per_inference(self.model)
+        energy = power_report(
+            flops=ops * batch, hbm_bytes=self.plan["weight_bytes"],
+            ici_bytes=0, latency_s=latency_s,
+            unit=self.plan["compute_unit"],
+            dtype="int8" if self.accel.fxp.total_bits <= 8 else "bf16")
+        return {
+            "model": dataclasses.asdict(self.model),
+            # JSON-friendly: the plan's FixedPointConfig becomes a dict too.
+            "plan": {**self.plan,
+                     "fxp": dataclasses.asdict(self.plan["fxp"])},
+            "backend": self.plan["backend"],
+            "backends_supported": backends.supported_backends(self.model,
+                                                              self.accel),
+            "ops_per_inference": ops,
+            "weight_bytes": self.plan["weight_bytes"],
+            "quantized": self.qparams is not None,
+            "energy": energy,
+        }
+
+    def __repr__(self) -> str:
+        return (f"Accelerator(fxp={self.model.fxp}, "
+                f"unit={self.plan['compute_unit']}, "
+                f"wmem={self.plan['weight_memory']}, "
+                f"alu={self.plan['alu_mode']}, "
+                f"hs={self.plan['hs_method']}, "
+                f"backend={self.plan['backend']}, "
+                f"quantized={self.qparams is not None})")

@@ -1,0 +1,103 @@
+"""Backend-dispatch registry for the quantised-LSTM accelerator datapath.
+
+Every execution engine behind ``Accelerator.infer``/``Accelerator.serve``
+lives here; nothing outside this package imports ``forward_int`` or
+``qlstm_seq_pallas`` directly.  Three engines are registered:
+
+  * ``ref``    — the bit-exact pure-jnp oracle (`kernels/ref.py`): two
+                 explicit matmuls per step, pipelined (late-rounding) ALU
+                 with the hard activations.  The specification the other
+                 two must match bit-for-bit.
+  * ``pallas`` — the fused TPU kernel (`kernels/qlstm_cell.py`): weights
+                 VMEM-resident, double-buffered input DMA, MXU or VPU
+                 compute.  Pipelined ALU + hard activations only.
+  * ``xla``    — the ``lax.scan`` datapath (`core/qlstm.forward_int`):
+                 supports every Table-2 point including the per-step
+                 (non-pipelined, baseline [15]) ALU and the 256-entry LUT
+                 activations.
+
+Selection is plan-driven (``core/accelerator.resolve_backend``): ``auto``
+picks ``pallas`` when the configuration fits the fused kernel, else
+``xla``; ``AcceleratorConfig.backend`` or the ``backend=`` argument of
+``Accelerator.infer`` overrides explicitly.
+
+A backend exposes
+
+  run(qparams, x_int, model, accel) -> y_int      # whole model, batch-major
+  layer(x_int, w_x, w_h, b_wide, model, accel)    # one layer, time-major
+  supports(model, accel) -> Optional[str]         # None = ok, else reason
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.accelerator import (AcceleratorConfig, resolve_backend,
+                                    resolve_model)
+from repro.core.qlstm import QLSTMConfig
+
+
+class BackendUnsupported(ValueError):
+    """Raised when an explicitly requested backend cannot execute the
+    resolved (model, accelerator) configuration."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    run: Callable                       # (qparams, x_int, model, accel) -> y_int
+    supports: Callable                  # (model, accel) -> Optional[str]
+    layer: Optional[Callable] = None    # (x_int, wx, wh, b, model, accel) -> h_seq
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register(backend: Backend) -> Backend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def select(model: QLSTMConfig, accel: AcceleratorConfig,
+           override: Optional[str] = None) -> Backend:
+    """Resolve the backend for a configuration.
+
+    ``override`` (or a non-``auto`` ``accel.backend``) is honoured verbatim
+    — raising :class:`BackendUnsupported` if the engine can't run the
+    configuration.  ``auto`` asks the plan."""
+    model = resolve_model(model, accel, warn=False)
+    name = override if override not in (None, "auto") \
+        else resolve_backend(model, accel)
+    backend = get(name)
+    reason = backend.supports(model, accel)
+    if reason is not None:
+        raise BackendUnsupported(
+            f"backend {name!r} cannot run this configuration: {reason}")
+    return backend
+
+
+def supported_backends(model: QLSTMConfig,
+                       accel: AcceleratorConfig) -> Tuple[str, ...]:
+    """Names of every registered backend able to run the configuration."""
+    model = resolve_model(model, accel, warn=False)
+    return tuple(n for n in available()
+                 if _REGISTRY[n].supports(model, accel) is None)
+
+
+# Importing the submodules registers the engines.
+from repro.backends import pallas as _pallas  # noqa: E402,F401
+from repro.backends import ref as _ref        # noqa: E402,F401
+from repro.backends import xla as _xla        # noqa: E402,F401

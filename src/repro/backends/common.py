@@ -1,0 +1,46 @@
+"""Shared scaffolding for the layered (ref / pallas) backends: both engines
+implement one *layer* (time-major sequence of cell steps); the whole-model
+``run`` — layer stacking plus the dense head with the single late rounding —
+is identical and lives here so the two cannot drift."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.qlstm import QLSTMConfig
+
+Array = jax.Array
+
+
+def supports_fused(model: QLSTMConfig,
+                   accel: AcceleratorConfig) -> Optional[str]:
+    """Both layered engines implement exactly the paper's pipelined datapath
+    with the hard activations (C2+C3).  Anything else is the xla engine's
+    job."""
+    if model.alu_mode != "pipelined":
+        return (f"alu_mode={model.alu_mode!r}: only the pipelined "
+                "(late-rounding) ALU is implemented")
+    if model.acts.gate != "hard_sigmoid_star":
+        return f"gate activation {model.acts.gate!r}: needs hard_sigmoid_star"
+    if model.acts.cell != "hard_tanh":
+        return f"cell activation {model.acts.cell!r}: needs hard_tanh"
+    return None
+
+
+def run_layered(layer_fn: Callable, qparams, x_int: Array,
+                model: QLSTMConfig, accel: AcceleratorConfig) -> Array:
+    """Stack ``layer_fn`` over ``model.num_layers`` and apply the dense head.
+
+    x_int: (B, T, M) integer codes in ``model.fxp`` -> (B, P) codes."""
+    h_t = jnp.swapaxes(x_int, 0, 1).astype(jnp.int32)   # time-major (T, B, M)
+    for p in qparams["layers"]:
+        h_t = layer_fn(h_t, p["w_x"], p["w_h"], p["b"], model, accel)
+        h_t = h_t.astype(jnp.int32)
+    h_last = h_t[-1]
+    return fxp.fxp_matvec_late_rounding(
+        h_last, qparams["dense"]["w"], qparams["dense"]["b"], model.fxp)

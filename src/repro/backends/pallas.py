@@ -1,0 +1,56 @@
+"""``pallas`` backend — the fused TPU kernel (`kernels/qlstm_cell.py`).
+
+Weights fetched once into VMEM and resident across all timesteps, input DMA
+double-buffered against MXU/VPU compute, int32 accumulator with the single
+S5 rounding.  Runs ``interpret=True`` off-TPU (bit-exact execution of the
+kernel body — the validation mode for CPU containers) and compiled on TPU.
+
+The ``1to1`` HardSigmoid* method is a full-LUT gather — the MXU/VPU kernel
+lowers it to the bit-identical ``arithmetic`` form instead (the three
+methods agree by construction; `core/hard_act.py`)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends import Backend, register
+from repro.backends.common import run_layered, supports_fused
+from repro.core.accelerator import AcceleratorConfig, sync_accelerator
+from repro.core.qlstm import QLSTMConfig
+from repro.kernels.qlstm_cell import qlstm_seq_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def layer(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+          model: QLSTMConfig, accel: AcceleratorConfig) -> Array:
+    """One fused LSTM layer, time-major: (T, B, M) codes -> (T, B, H)."""
+    acts = model.acts
+    acc = sync_accelerator(model, accel)
+    hs_method = "arithmetic" if acc.hs_method == "1to1" else acc.hs_method
+    out = qlstm_seq_pallas(
+        x_int.astype(model.fxp.storage_dtype),
+        w_x.astype(model.fxp.storage_dtype),
+        w_h.astype(model.fxp.storage_dtype),
+        b_wide,
+        cfg=model.fxp,
+        hs_method=hs_method,
+        hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
+        ht_min=acts.ht_min, ht_max=acts.ht_max,
+        compute_unit=acc.compute_unit,
+        interpret=_interpret())
+    return out.astype(jnp.int32)
+
+
+def run(qparams, x_int: Array, model: QLSTMConfig,
+        accel: AcceleratorConfig) -> Array:
+    return run_layered(layer, qparams, x_int, model, accel)
+
+
+BACKEND = register(Backend(name="pallas", run=run, supports=supports_fused,
+                           layer=layer))

@@ -1,0 +1,36 @@
+"""``ref`` backend — the bit-exact pure-jnp oracle (`kernels/ref.py`).
+
+Two explicit int32 matmuls per cell step, single late rounding (S5), hard
+activations.  This is the specification: the pallas engine must match it
+bit-for-bit (`tests/test_api.py`, `tests/test_kernels.py`)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.backends import Backend, register
+from repro.backends.common import run_layered, supports_fused
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.qlstm import QLSTMConfig
+from repro.kernels import ref as _ref
+
+Array = jax.Array
+
+
+def layer(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+          model: QLSTMConfig, accel: AcceleratorConfig) -> Array:
+    """One LSTM layer, time-major: (T, B, M) codes -> (T, B, H) codes."""
+    acts = model.acts
+    return _ref.qlstm_seq_ref(
+        x_int, w_x, w_h, b_wide, model.fxp,
+        hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
+        ht_min=acts.ht_min, ht_max=acts.ht_max)
+
+
+def run(qparams, x_int: Array, model: QLSTMConfig,
+        accel: AcceleratorConfig) -> Array:
+    return run_layered(layer, qparams, x_int, model, accel)
+
+
+BACKEND = register(Backend(name="ref", run=run, supports=supports_fused,
+                           layer=layer))

@@ -1,0 +1,39 @@
+"""``xla`` backend — the ``lax.scan`` integer datapath
+(`core/qlstm.forward_int`).
+
+The most general engine: every Table-2 point runs here, including the
+non-pipelined per-step ALU (Algorithm 1 as printed — the baseline [15]
+datapath) and the 256-entry LUT Sigmoid/Tanh activations.  For pipelined
+configurations with hard activations it is bit-identical to the ``ref`` and
+``pallas`` engines."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.backends import Backend, register
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.qlstm import QLSTMConfig, forward_int
+
+Array = jax.Array
+
+_GATES = ("hard_sigmoid_star", "lut_sigmoid", "sigmoid")
+_CELLS = ("hard_tanh", "lut_tanh", "tanh")
+
+
+def supports(model: QLSTMConfig, accel: AcceleratorConfig) -> Optional[str]:
+    if model.acts.gate not in _GATES:
+        return f"gate activation {model.acts.gate!r} has no integer datapath"
+    if model.acts.cell not in _CELLS:
+        return f"cell activation {model.acts.cell!r} has no integer datapath"
+    return None
+
+
+def run(qparams, x_int: Array, model: QLSTMConfig,
+        accel: AcceleratorConfig) -> Array:
+    return forward_int(qparams, x_int, model)
+
+
+BACKEND = register(Backend(name="xla", run=run, supports=supports))

@@ -1,6 +1,31 @@
-# The paper's primary contribution — the parameterised quantised-execution
-# core: fixed-point datapath (C1), hard activations (C2), pipelined-ALU
-# semantics (C3), accelerator meta-parameters (C4), energy model (C5).
+"""The paper's primary contribution: the parameterised quantised-execution
+core.
+
+  * ``fixed_point``  — C1: the (a, b) fixed-point datapath.  Bit-exact
+    integer simulation (round-half-up ``f_round``, truncating slope shift,
+    saturating adds) shared by the oracle, the Pallas kernels, and QAT.
+  * ``hard_act``     — C2: HardSigmoid* (three bit-identical integer
+    methods: arithmetic / 1to1 / step, plus the Pallas-safe unrolled step
+    cascade) and HardTanh, with the baseline's 256-entry LUT activations.
+  * ``qlstm``        — the model and its three datapaths: ``forward_float``
+    (training), ``forward_qat`` (STE fake-quant at every hardware rounding
+    point), ``forward_int`` (bit-exact integer oracle; pipelined C3 or
+    per-step baseline ALU).
+  * ``accelerator``  — C4: Table-2 implementation meta-parameters
+    (``AcceleratorConfig`` — the single source of truth for ``fxp``,
+    ``alu_mode``, ``hs_method``, ``ht_min``/``ht_max``, ``backend``),
+    ``resolve_model`` (the one-release deprecation shim for the legacy
+    model-side mirrors), and ``plan()`` (VMEM/HBM residency, MXU/VPU
+    dispatch, backend selection).
+  * ``energy``       — C5: the TPU-v5e power/energy model behind
+    ``Accelerator.report()`` (Table-4 structure: static/dynamic split,
+    GOP/s, GOP/s/W).
+
+Lifecycle on top of this core (see docs/API.md): ``repro.build(model,
+accel)`` -> ``train_qat`` -> ``quantize`` -> ``infer``/``serve``/``report``,
+with execution engines in ``repro/backends/`` (``ref`` | ``pallas`` |
+``xla``) selected by ``plan()``.
+"""
 from repro.core.fixed_point import (  # noqa: F401
     FixedPointConfig, FXP_4_8, FXP_6_8, FXP_8_10, FXP_8_16,
     quantize, dequantize, fake_quant, requantize,
@@ -16,5 +41,6 @@ from repro.core.qlstm import (  # noqa: F401
     ops_per_inference,
 )
 from repro.core.accelerator import (  # noqa: F401
-    AcceleratorConfig, PAPER_DEFAULT, PAPER_NO_MXU, BASELINE_15, plan,
+    AcceleratorConfig, PAPER_DEFAULT, PAPER_NO_MXU, BASELINE_15,
+    plan, resolve_model, sync_accelerator, resolve_backend,
 )

@@ -213,6 +213,21 @@ def hs_star_int_step(x_int: Array, spec: HardSigmoidStarSpec) -> Array:
     return jnp.take(outputs, idx, axis=0)
 
 
+def hs_star_int_step_unrolled(x_int: Array, spec: HardSigmoidStarSpec) -> Array:
+    """``step`` method as a compile-time-unrolled comparator cascade.
+
+    Bit-identical to :func:`hs_star_int_step` (same ``step_table``), but
+    gather-free — the form the Pallas TPU kernel uses, where a LUT gather
+    doesn't vectorise but a handful of compare+adds does (exactly the
+    FPGA's cascaded-comparator structure)."""
+    thresholds, outputs = step_table(spec)
+    x = x_int.astype(jnp.int32)
+    y = jnp.full_like(x, int(outputs[0]))
+    for thr, prev, nxt in zip(thresholds, outputs[:-1], outputs[1:]):
+        y = y + jnp.where(x >= int(thr), int(nxt) - int(prev), 0)
+    return y
+
+
 def hs_star_int(x_int: Array, spec: HardSigmoidStarSpec, method: str = "arithmetic") -> Array:
     if method == "arithmetic":
         return hs_star_int_arithmetic(x_int, spec)

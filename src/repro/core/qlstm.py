@@ -37,15 +37,20 @@ Params = Dict[str, Any]
 
 @dataclasses.dataclass(frozen=True)
 class ActivationConfig:
-    """Which activation implementations the cell uses (paper §4.2)."""
+    """Which activation implementations the cell uses (paper §4.2).
+
+    ``hs_method`` / ``ht_min`` / ``ht_max`` are deprecated mirrors: the
+    canonical home is ``AcceleratorConfig`` (see
+    ``core.accelerator.resolve_model`` and docs/API.md); they are honoured
+    here for one release."""
 
     gate: str = "hard_sigmoid_star"   # sigmoid | lut_sigmoid | hard_sigmoid_star
     cell: str = "hard_tanh"           # tanh | lut_tanh | hard_tanh
-    hs_method: str = "step"           # arithmetic | 1to1 | step (integer path)
+    hs_method: str = "step"           # DEPRECATED -> AcceleratorConfig.hs_method
     hs_slope_shift: int = 3           # slope = 2**-3 = 0.125
     hs_bound: float = 3.0
-    ht_min: float = -1.0
-    ht_max: float = 1.0
+    ht_min: float = -1.0              # DEPRECATED -> AcceleratorConfig.ht_min
+    ht_max: float = 1.0               # DEPRECATED -> AcceleratorConfig.ht_max
 
     def hs_spec(self, cfg: FixedPointConfig) -> hard_act.HardSigmoidStarSpec:
         return hard_act.HardSigmoidStarSpec(cfg, self.hs_slope_shift, self.hs_bound)
@@ -58,7 +63,11 @@ FLOAT_ACTS = ActivationConfig(gate="sigmoid", cell="tanh")
 
 @dataclasses.dataclass(frozen=True)
 class QLSTMConfig:
-    """The paper's Table-2 functional meta-parameters."""
+    """The paper's Table-2 functional meta-parameters.
+
+    ``fxp`` and ``alu_mode`` are deprecated mirrors of the canonical
+    ``AcceleratorConfig`` fields, honoured for one release
+    (``core.accelerator.resolve_model``; docs/API.md)."""
 
     input_size: int = 1           # M
     hidden_size: int = 20         # K
@@ -66,8 +75,8 @@ class QLSTMConfig:
     out_features: int = 1         # P
     seq_len: int = 6              # N (PeMS-4W window used by [15])
     acts: ActivationConfig = PAPER_ACTS
-    fxp: FixedPointConfig = FXP_4_8
-    alu_mode: str = "pipelined"   # pipelined (late rounding) | per_step
+    fxp: FixedPointConfig = FXP_4_8   # DEPRECATED -> AcceleratorConfig.fxp
+    alu_mode: str = "pipelined"   # DEPRECATED -> AcceleratorConfig.alu_mode
 
     def layer_in_dim(self, layer: int) -> int:
         return self.input_size if layer == 0 else self.hidden_size

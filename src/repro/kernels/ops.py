@@ -16,12 +16,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fixed_point as fxp
-from repro.core.accelerator import AcceleratorConfig, plan
+from repro.core.accelerator import AcceleratorConfig, resolve_model
 from repro.core.fixed_point import FixedPointConfig
 from repro.core.qlstm import QLSTMConfig
 from repro.kernels import ref
 from repro.kernels.hard_act import hard_sigmoid_star_pallas, hard_tanh_pallas
-from repro.kernels.qlstm_cell import qlstm_seq_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
 
 Array = jax.Array
@@ -36,29 +35,22 @@ def qlstm_seq(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
               use_kernel: bool = True) -> Array:
     """Time-major quantised LSTM layer: (T, B, M) codes -> (T, B, H) codes.
 
-    ``accel`` resolves the Table-2 meta-parameters (compute unit, weight
-    residency, HardSigmoid* method, pipelining)."""
+    Thin layer-level wrapper over the layered engines of the backend
+    registry (`repro/backends/`): the fused Pallas kernel, or the pure-jnp
+    oracle with ``use_kernel=False``.  Both implement exactly the pipelined
+    (late-rounding) ALU with the hard activations; any other Table-2 point
+    (per-step baseline ALU, LUT activations) raises ``BackendUnsupported``
+    — run it through ``core.qlstm.forward_int`` / ``Accelerator.infer``
+    (the xla engine) instead."""
+    from repro import backends
     accel = accel or AcceleratorConfig()
-    p = plan(model, accel)
-    acts = model.acts
-    if not use_kernel or not p["pipelined_alu"]:
-        # Oracle path (also the per_step baseline — no fused kernel exists
-        # for the non-pipelined ALU, faithfully to the paper's baseline).
-        return ref.qlstm_seq_ref(
-            x_int, w_x, w_h, b_wide, model.fxp,
-            hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
-            ht_min=acts.ht_min, ht_max=acts.ht_max)
-    return qlstm_seq_pallas(
-        x_int.astype(model.fxp.storage_dtype),
-        w_x.astype(model.fxp.storage_dtype),
-        w_h.astype(model.fxp.storage_dtype),
-        b_wide,
-        cfg=model.fxp,
-        hs_method=("arithmetic" if p["hs_method"] == "1to1" else p["hs_method"]),
-        hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
-        ht_min=acts.ht_min, ht_max=acts.ht_max,
-        compute_unit=p["compute_unit"],
-        interpret=_interpret()).astype(jnp.int32)
+    m = resolve_model(model, accel, warn=False)
+    reason = backends.common.supports_fused(m, accel)
+    if reason is not None:
+        raise backends.BackendUnsupported(
+            f"qlstm_seq runs the fused layered datapath only: {reason}")
+    name = "pallas" if use_kernel else "ref"
+    return backends.get(name).layer(x_int, w_x, w_h, b_wide, m, accel)
 
 
 def quant_matmul(x_int8: Array, w_int8: Array, use_kernel: bool = True,

@@ -39,21 +39,6 @@ from repro.core.fixed_point import FixedPointConfig, product_config
 Array = jax.Array
 
 
-def _hs_star_arith(x, spec: hard_act.HardSigmoidStarSpec):
-    lin = jnp.clip((x >> spec.slope_shift) + spec.half_int, 0, spec.one_int)
-    return jnp.where(x < -spec.bound_int, 0,
-                     jnp.where(x >= spec.bound_int, spec.one_int, lin))
-
-
-def _hs_star_step(x, spec: hard_act.HardSigmoidStarSpec):
-    # Compile-time constant comparator cascade — the FPGA 'step' LUT.
-    thresholds, outputs = hard_act.step_table(spec)
-    y = jnp.full_like(x, int(outputs[0]))
-    for thr, prev, nxt in zip(thresholds, outputs[:-1], outputs[1:]):
-        y = y + jnp.where(x >= int(thr), int(nxt) - int(prev), 0)
-    return y
-
-
 def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
                  hs_slope_shift: int, hs_bound: float,
                  ht_min: float, ht_max: float, compute_unit: str,
@@ -64,9 +49,14 @@ def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
     spec = hard_act.HardSigmoidStarSpec(cfg, hs_slope_shift, hs_bound)
     lo = cfg.int_min
     hi = cfg.int_max
-    ht_lo = int(max(cfg.int_min, round(ht_min * (1 << cfg.frac_bits))))
-    ht_hi = int(min(cfg.int_max, round(ht_max * (1 << cfg.frac_bits))))
-    hs = _hs_star_step if hs_method == "step" else _hs_star_arith
+    # Shared integer spec (core/hard_act.py) — the kernel uses the exact
+    # oracle helpers so the two implementations cannot drift.  The 'step'
+    # method is the gather-free unrolled cascade; HardTanh is the same
+    # pair of comparators the oracle clips with.
+    hs = (hard_act.hs_star_int_step_unrolled if hs_method == "step"
+          else hard_act.hs_star_int_arithmetic)
+    ht = functools.partial(hard_act.hard_tanh_int, cfg=cfg,
+                           min_val=ht_min, max_val=ht_max)
 
     def requant(v):  # round-half-up shift + saturate: the single S5 rounding
         return jnp.clip((v + half) >> shift, lo, hi)
@@ -100,13 +90,13 @@ def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
 
         i = hs(pre[:, :hdim], spec)
         f = hs(pre[:, hdim:2 * hdim], spec)
-        g = jnp.clip(pre[:, 2 * hdim:3 * hdim], ht_lo, ht_hi)
+        g = ht(pre[:, 2 * hdim:3 * hdim])
         o = hs(pre[:, 3 * hdim:], spec)
 
         c = c_ref[...]
         wide = f * c + i * g                 # both products wide, add, ...
         c_new = requant(wide)                # ... round once
-        tanh_c = jnp.clip(c_new, ht_lo, ht_hi)
+        tanh_c = ht(c_new)
         h_new = requant(o * tanh_c)
 
         h_ref[...] = h_new

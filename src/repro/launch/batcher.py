@@ -10,13 +10,22 @@ boundaries; per-slot retirement within a wave masks the slot's output.
 (Continuous batching — per-slot cache positions — needs per-row scatter
 cache updates; wave scheduling is the static-shape-friendly form and what
 the dry-run's decode cells model: every active slot advances together.)
+
+Two modes share the queue/wave machinery:
+
+  * LM decode (default): ``WaveBatcher(params, cfg, ...)`` — autoregressive
+    lockstep decoding as above.
+  * LSTM accelerator: ``WaveBatcher.for_accelerator(session, batch_size)``
+    — requests are (T, M) windows; waves run through
+    ``Accelerator.serve`` (the paper's int8 datapath), one static batch
+    shape, results are per-window predictions.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,22 +40,31 @@ Array = jax.Array
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray          # (prompt_len,) int32
+    prompt: np.ndarray          # LM: (prompt_len,) int32; LSTM: (T, M) float
     max_new: int
     eos_id: Optional[int] = None
-    output: List[int] = dataclasses.field(default_factory=list)
+    output: Any = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class WaveBatcher:
-    def __init__(self, params, cfg: ModelConfig, batch_size: int,
-                 max_seq: int):
+    def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
+                 max_seq: int = 0, *, _lstm_mode: bool = False):
         self.params = params
         self.cfg = cfg
         self.bs = batch_size
         self.max_seq = max_seq
         self.queue: Deque[Request] = deque()
         self._next_id = 0
+        self.accelerator = None     # set by for_accelerator()
+
+        if _lstm_mode:
+            return  # LSTM-accelerator mode: no decode graph
+        if cfg is None:
+            raise TypeError("LM mode needs a ModelConfig; for the LSTM-"
+                            "accelerator mode use WaveBatcher.for_accelerator")
+        if max_seq <= 0:
+            raise ValueError("LM mode needs max_seq > 0 (the cache budget)")
 
         def decode(params, cache, tokens, pos):
             batch = {"tokens": tokens, "cache_pos": pos}
@@ -58,12 +76,34 @@ class WaveBatcher:
 
         self._decode = jax.jit(decode)
 
+    @classmethod
+    def for_accelerator(cls, session, batch_size: int = 256,
+                        path: str = "int") -> "WaveBatcher":
+        """LSTM-accelerator mode over a built ``repro.Accelerator`` session.
+
+        Requests are (T, M) float windows submitted with
+        ``submit_window``; ``run()`` drains them in fixed-size waves
+        through ``session.serve`` and returns {rid: (P,) prediction}."""
+        b = cls(None, None, batch_size=batch_size, _lstm_mode=True)
+        b.accelerator = session
+        b._serve_path = path
+        return b
+
     def submit(self, prompt: np.ndarray, max_new: int,
                eos_id: Optional[int] = None) -> int:
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   max_new, eos_id))
+        return rid
+
+    def submit_window(self, window: np.ndarray) -> int:
+        """LSTM mode: enqueue one (T, M) float window."""
+        assert self.accelerator is not None, "use for_accelerator() first"
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, np.asarray(window, np.float32),
+                                  max_new=0))
         return rid
 
     def _run_wave(self, wave: List[Request]) -> None:
@@ -100,8 +140,13 @@ class WaveBatcher:
         for r in wave:
             r.done = True
 
-    def run(self) -> Dict[int, List[int]]:
-        """Drain the queue; returns {rid: generated tokens}."""
+    def run(self) -> Dict[int, Any]:
+        """Drain the queue.
+
+        LM mode: {rid: generated tokens}.  LSTM-accelerator mode:
+        {rid: (P,) float prediction} via ``Accelerator.serve``."""
+        if self.accelerator is not None:
+            return self._run_lstm()
         results: Dict[int, List[int]] = {}
         while self.queue:
             wave = []
@@ -113,4 +158,18 @@ class WaveBatcher:
             for r in wave:
                 if r.rid >= 0:
                     results[r.rid] = r.output
+        return results
+
+    def _run_lstm(self) -> Dict[int, np.ndarray]:
+        reqs: List[Request] = []
+        while self.queue:
+            reqs.append(self.queue.popleft())
+        stream = (r.prompt for r in reqs)
+        preds = self.accelerator.serve(stream, batch=self.bs,
+                                       path=self._serve_path)
+        results: Dict[int, np.ndarray] = {}
+        for r, y in zip(reqs, preds):
+            r.output = y
+            r.done = True
+            results[r.rid] = y
         return results

@@ -8,7 +8,19 @@ XLA_FLAGS before any jax initialisation.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: make_mesh has no axis_types kwarg
+    AxisType = None
+
+
+def _make_mesh(shape, axes, devices=None):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes, devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -26,14 +38,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices for mesh {shape}, have {len(devices)} — the "
             "dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before importing jax")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh(model_parallel: int = 1) -> Mesh:
     """Mesh over whatever devices exist (tests / CPU training)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((n // model_parallel, model_parallel), ("data", "model"))

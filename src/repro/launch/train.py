@@ -25,57 +25,33 @@ from repro.core.quant import QuantConfig
 from repro.data.lm_data import SyntheticLM
 from repro.data.timeseries import pems_like_dataset
 from repro.launch.mesh import make_host_mesh
-from repro.models import lstm_model
 from repro.models import transformer as T
 from repro.sharding.partition import param_shardings, rules_context
-from repro.training.optimizer import OptConfig, apply_updates, init_opt_state
+from repro.training.optimizer import OptConfig
 from repro.training.step import TrainPlan, init_train_state, make_train_step
 from repro.training.train_loop import LoopConfig, Trainer
 
 
 def train_lstm(args):
-    """The paper's model: QAT on PeMS-like data (§6.1)."""
+    """The paper's model: QAT on PeMS-like data (§6.1), through the session
+    API: build -> train_qat -> quantize -> infer (docs/API.md)."""
+    import repro
     cfg: QLSTMConfig = ARCH_CONFIGS["lstm-pems"]
     data = pems_like_dataset(seq_len=cfg.seq_len, seed=0)
-    xtr, ytr = data["train"]
-    params = lstm_model.init_lstm_model(cfg, jax.random.key(args.seed))[0]
-    opt_cfg = OptConfig(name="adamw", lr=args.lr or 3e-3, weight_decay=0.0,
-                        warmup_steps=20, total_steps=args.steps)
-    state = {"params": params, "opt": init_opt_state(params, opt_cfg),
-             "step": jnp.zeros((), jnp.int32)}
 
-    @jax.jit
-    def step_fn(state, batch):
-        def loss(p):
-            return lstm_model.loss_fn(p, batch, cfg, mode="qat")
-        (l, m), g = jax.value_and_grad(loss, has_aux=True)(state["params"])
-        p, o, om = apply_updates(state["params"], g, state["opt"], opt_cfg)
-        return ({"params": p, "opt": o, "step": state["step"] + 1},
-                {"loss": l, **om})
-
-    def batch_fn(step):
-        rng = np.random.default_rng((args.seed, step))
-        idx = rng.integers(0, len(xtr), args.batch)
-        return {"x": jnp.asarray(xtr[idx]), "y": jnp.asarray(ytr[idx])}
-
-    trainer = Trainer(step_fn, state, batch_fn,
-                      LoopConfig(total_steps=args.steps,
-                                 ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                                 log_every=50))
-    trainer.maybe_resume()
-    out = trainer.run()
+    acc = repro.build(cfg, seed=args.seed)
+    acc.train_qat(data, steps=args.steps, batch=args.batch,
+                  lr=args.lr or 3e-3, seed=args.seed,
+                  ckpt_dir=args.ckpt_dir)
+    acc.quantize()
 
     # Evaluation: float vs QAT vs the bit-exact integer (accelerator) path.
-    xte, yte = data["test"]
-    p = trainer.state["params"]
-    for name, fn in [
-            ("float", lambda x: lstm_model.forward(p, x, cfg, "float")),
-            ("qat", lambda x: lstm_model.forward(p, x, cfg, "qat")),
-            ("int8-kernel", lambda x: lstm_model.serve_int(p, x, cfg))]:
-        pred = fn(jnp.asarray(xte))
-        mse = float(jnp.mean((pred - jnp.asarray(yte)) ** 2))
+    xte, yte = map(jnp.asarray, data["test"])
+    for name, path in [("float", "float"), ("qat", "qat"),
+                       ("int8-kernel", "int")]:
+        mse = float(jnp.mean((acc.infer(xte, path=path) - yte) ** 2))
         print(f"  test MSE [{name:12s}] = {mse:.5f}")
-    return out
+    return acc.train_summary
 
 
 def train_lm(args):

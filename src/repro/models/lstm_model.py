@@ -3,20 +3,22 @@ framework interface as the LM architectures: (params, axes) init, train
 forward (MSE regression — single-step-ahead time-series prediction on
 PeMS-4W-like data), QAT forward, and the integer serve path that matches
 the accelerator bit-for-bit.
+
+The deployment surface moved to the session API: ``repro.build(model,
+accel)`` owns quantisation and backend dispatch (see docs/API.md);
+``serve_int`` below remains as a one-release deprecation shim.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import fixed_point as fxp
 from repro.core.accelerator import AcceleratorConfig
-from repro.core.qlstm import (QLSTMConfig, forward_float, forward_int,
-                              forward_qat, init_params, quantize_params)
-from repro.kernels import ops
+from repro.core.qlstm import QLSTMConfig, forward_float, forward_qat, init_params
 
 Array = jax.Array
 
@@ -43,20 +45,21 @@ def loss_fn(params, batch: Dict[str, Array], cfg: QLSTMConfig,
 
 def serve_int(params, x: Array, cfg: QLSTMConfig,
               accel: AcceleratorConfig = None, use_kernel: bool = True) -> Array:
-    """Deployment path: float inputs -> integer codes -> fused Pallas kernel
-    (or bit-exact oracle) -> float outputs."""
-    accel = accel or AcceleratorConfig()
-    qp = quantize_params(params, cfg)
-    x_int = fxp.quantize(x, cfg.fxp)
-    if use_kernel and cfg.num_layers == 1 and cfg.alu_mode == "pipelined":
-        h_seq = ops.qlstm_seq(
-            jnp.swapaxes(x_int, 0, 1).astype(cfg.fxp.storage_dtype),
-            qp["layers"][0]["w_x"].astype(cfg.fxp.storage_dtype),
-            qp["layers"][0]["w_h"].astype(cfg.fxp.storage_dtype),
-            qp["layers"][0]["b"], cfg, accel)
-        h_last = h_seq[-1].astype(jnp.int32)
-        y_int = fxp.fxp_matvec_late_rounding(
-            h_last, qp["dense"]["w"], qp["dense"]["b"], cfg.fxp)
-    else:
-        y_int = forward_int(qp, x_int, cfg)
-    return fxp.dequantize(y_int, cfg.fxp)
+    """Deployment path: float inputs -> integer codes -> accelerator
+    datapath -> float outputs.
+
+    .. deprecated:: 0.2
+       Use the session API instead — it caches the quantised params and the
+       jitted datapath across calls::
+
+           sess = repro.build(cfg, accel, params=params).quantize()
+           y = sess.infer(x, path="int")
+
+    ``use_kernel=False`` forces the ``xla`` (lax.scan oracle) backend, as
+    before."""
+    warnings.warn("lstm_model.serve_int is deprecated; use "
+                  "repro.build(cfg, accel, params=params).quantize()"
+                  ".infer(x, path='int')", DeprecationWarning, stacklevel=2)
+    from repro import api
+    sess = api.build(cfg, accel or AcceleratorConfig(), params=params).quantize()
+    return sess.infer(x, path="int", backend=None if use_kernel else "xla")

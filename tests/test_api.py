@@ -1,0 +1,209 @@
+"""The unified session API: lifecycle, backend parity, config unification.
+
+The heart is the parity sweep: every combination of datapath x backend x
+HardSigmoid* method x ALU mode must agree BIT-EXACTLY on the integer path
+through ``Accelerator.infer`` — the paper's claim that one parameterised
+design has many interchangeable implementations."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import backends
+from repro.core.accelerator import (AcceleratorConfig, BASELINE_15,
+                                    resolve_model)
+from repro.core.fixed_point import FXP_8_16
+from repro.core.qlstm import ActivationConfig, BASELINE_ACTS, QLSTMConfig
+
+
+def _x(b=8, t=6, m=1, seed=1):
+    return jax.random.normal(jax.random.key(seed), (b, t, m)) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# Backend parity — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", ["float", "qat", "int"])
+@pytest.mark.parametrize("hs_method", ["arithmetic", "1to1", "step"])
+@pytest.mark.parametrize("alu_mode", ["pipelined", "per_step"])
+def test_paths_and_backends_parity(path, hs_method, alu_mode):
+    """path x backend x hs_method x alu_mode sweep.
+
+    Int path: every backend able to run the configuration returns
+    bit-identical outputs.  Float/QAT paths: backend-independent by
+    construction — assert the engines' int results stay within 1 LSB of
+    the QAT simulation (the datapath-faithfulness contract)."""
+    acc_cfg = AcceleratorConfig(hs_method=hs_method, alu_mode=alu_mode)
+    sess = repro.build(QLSTMConfig(), acc_cfg).quantize()
+    x = _x()
+
+    if path in ("float", "qat"):
+        y = sess.infer(x, path=path)
+        assert y.shape == (8, 1) and bool(jnp.all(jnp.isfinite(y)))
+        return
+
+    names = backends.supported_backends(sess.model, sess.accel)
+    assert "xla" in names  # the general engine runs every Table-2 point
+    if alu_mode == "pipelined":
+        assert set(names) == {"ref", "pallas", "xla"}
+    outs = {n: np.asarray(sess.infer(x, path="int", backend=n))
+            for n in names}
+    ref_name = names[0]
+    for n, out in outs.items():
+        np.testing.assert_array_equal(
+            out, outs[ref_name],
+            err_msg=f"backend {n} != {ref_name} for hs={hs_method}, "
+                    f"alu={alu_mode}")
+    # datapath faithfulness: int within 1 LSB of the QAT fake-quant graph
+    yq = np.asarray(sess.infer(x, path="qat"))
+    assert np.abs(outs[ref_name] - yq).max() <= sess.model.fxp.scale + 1e-7
+
+
+@pytest.mark.parametrize("unit", ["mxu", "vpu"])
+def test_parity_multilayer_and_units(unit):
+    """Stacked layers through the fused kernel agree with the oracle."""
+    model = QLSTMConfig(input_size=2, hidden_size=8, num_layers=2, seq_len=4)
+    sess = repro.build(model, AcceleratorConfig(compute_unit=unit)).quantize()
+    x = _x(b=5, t=4, m=2)
+    outs = [np.asarray(sess.infer(x, path="int", backend=n))
+            for n in ("ref", "pallas", "xla")]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_explicit_unsupported_backend_raises():
+    sess = repro.build(QLSTMConfig(),
+                       AcceleratorConfig(alu_mode="per_step")).quantize()
+    with pytest.raises(backends.BackendUnsupported):
+        sess.infer(_x(), path="int", backend="pallas")
+    with pytest.raises(backends.BackendUnsupported):
+        sess.infer(_x(), path="int", backend="ref")
+    # a config-level impossible engine fails at build, not first infer
+    with pytest.raises(backends.BackendUnsupported):
+        repro.build(QLSTMConfig(),
+                    AcceleratorConfig(alu_mode="per_step", backend="pallas"))
+
+
+def test_auto_backend_follows_plan():
+    assert repro.build().plan["backend"] == "pallas"
+    assert repro.build(QLSTMConfig(),
+                       AcceleratorConfig(alu_mode="per_step")
+                       ).plan["backend"] == "xla"
+    assert repro.build(QLSTMConfig(acts=BASELINE_ACTS),
+                       BASELINE_15).plan["backend"] == "xla"
+    # explicit override sticks
+    assert repro.build(QLSTMConfig(),
+                       AcceleratorConfig(backend="ref")
+                       ).plan["backend"] == "ref"
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_train_quantize_infer_serve_report():
+    from repro.data.timeseries import pems_like_dataset
+    data = pems_like_dataset(seq_len=6, n_days=4)
+    sess = repro.build(seed=0)
+    sess.train_qat(data, steps=5, batch=16, log=lambda *_: None).quantize()
+    assert sess.train_summary["step"] == 5
+
+    xte, yte = data["test"]
+    y = sess.infer(jnp.asarray(xte[:32]), path="int")
+    assert y.shape == (32, 1)
+
+    # serve: wave-batched streaming matches batched infer, in order
+    preds = list(sess.serve(iter(xte[:37]), batch=16))
+    want = np.asarray(sess.infer(jnp.asarray(xte[:37]), path="int"))
+    assert len(preds) == 37
+    np.testing.assert_array_equal(np.stack(preds), want)
+
+    rep = sess.report()
+    assert rep["quantized"] and rep["plan"]["backend"] in ("pallas", "xla")
+    assert rep["ops_per_inference"] > 0 and rep["energy"]["total_w"] > 0
+
+
+def test_int_path_requires_quantize():
+    sess = repro.build()
+    with pytest.raises(RuntimeError, match="quantize"):
+        sess.infer(_x(), path="int")
+
+
+def test_train_invalidates_quantization():
+    from repro.data.timeseries import pems_like_dataset
+    data = pems_like_dataset(seq_len=6, n_days=4)
+    sess = repro.build().quantize()
+    assert sess.qparams is not None
+    sess.train_qat(data, steps=2, batch=8, log=lambda *_: None)
+    assert sess.qparams is None  # stale codes dropped
+
+
+# ---------------------------------------------------------------------------
+# Config unification / deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_accelerator_config_is_source_of_truth():
+    sess = repro.build(QLSTMConfig(),
+                       AcceleratorConfig(hs_method="arithmetic",
+                                         fxp=FXP_8_16,
+                                         alu_mode="per_step", ht_max=2.0))
+    assert sess.model.acts.hs_method == "arithmetic"
+    assert sess.model.fxp == FXP_8_16
+    assert sess.model.alu_mode == "per_step"
+    assert sess.model.acts.ht_max == 2.0
+
+
+def test_legacy_model_knobs_still_work_with_warning():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        m = resolve_model(QLSTMConfig(alu_mode="per_step",
+                                      acts=ActivationConfig(hs_method="1to1")),
+                          AcceleratorConfig())
+    assert m.alu_mode == "per_step" and m.acts.hs_method == "1to1"
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_pipelined_alu_alias():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        acc = AcceleratorConfig(pipelined_alu=False)
+    assert acc.alu_mode == "per_step" and acc.pipelined_alu is False
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert AcceleratorConfig().pipelined_alu is True
+
+
+def test_serve_int_shim_matches_session():
+    """The deprecated lstm_model.serve_int delegates to the same engines."""
+    from repro.models import lstm_model
+    cfg = QLSTMConfig()
+    sess = repro.build(cfg, seed=3)
+    x = _x(seed=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        y_old = lstm_model.serve_int(sess.params, x, cfg)
+    y_new = sess.quantize().infer(x, path="int")
+    np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+
+
+# ---------------------------------------------------------------------------
+# WaveBatcher LSTM-accelerator mode
+# ---------------------------------------------------------------------------
+
+def test_wave_batcher_lstm_mode():
+    from repro.launch.batcher import WaveBatcher
+    sess = repro.build(seed=0).quantize()
+    rng = np.random.default_rng(0)
+    windows = rng.uniform(0, 1, (11, 6, 1)).astype(np.float32)
+
+    b = WaveBatcher.for_accelerator(sess, batch_size=4)
+    rids = [b.submit_window(w) for w in windows]
+    out = b.run()
+    assert set(out) == set(rids)
+    want = np.asarray(sess.infer(jnp.asarray(windows), path="int"))
+    got = np.stack([out[r] for r in rids])
+    np.testing.assert_array_equal(got, want)

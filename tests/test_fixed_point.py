@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import fixed_point as fxp
 from repro.core.fixed_point import (FXP_4_8, FXP_8_16, FixedPointConfig,

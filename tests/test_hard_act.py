@@ -3,7 +3,7 @@ three-method bit-identity."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import hard_act as ha
 from repro.core.fixed_point import FXP_4_8, FXP_6_8, FXP_8_10, FixedPointConfig

@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.quant import (NO_QUANT, W8, W8A8, QuantConfig, compute_scale,
                               fq_matmul, qmatmul, quantize_kv,
