@@ -1,7 +1,8 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [table1 table3 table4 fig45 cells]
+  PYTHONPATH=src python -m benchmarks.run [table1 table3 table4 fig45 cells pareto]
   PYTHONPATH=src python -m benchmarks.run --smoke [out.json]
+  PYTHONPATH=src python -m benchmarks.run --sweep [--smoke] [out.json]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 
@@ -9,6 +10,12 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 plus one timed int-datapath measurement per backend through the session
 API — and writes it to ``BENCH_smoke.json`` (override with a positional
 path) so CI records the perf trajectory.
+
+``--sweep`` runs the design-space exploration (``repro.explore`` over the
+Table-4 space; ``--smoke`` restricts it to the deterministic 4-point CPU
+space) and writes the scored points + Pareto front to ``BENCH_pareto.json``
+(override with a positional path).  Render it with
+``python -m repro.analysis.report --pareto BENCH_pareto.json``.
 """
 
 import json
@@ -55,19 +62,36 @@ def smoke(out_path: str = "BENCH_smoke.json") -> None:
     print(f"[smoke] wrote {len(rows)} rows to {out_path}", file=sys.stderr)
 
 
+def sweep(argv) -> None:
+    from benchmarks import bench_pareto
+    smoke_mode = "--smoke" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    payload = bench_pareto.write_sweep(paths[0] if paths
+                                       else "BENCH_pareto.json",
+                                       smoke=smoke_mode,
+                                       iters=5 if smoke_mode else 20)
+    print("name,us_per_call,derived")
+    for n, us, d in bench_pareto._rows(payload):
+        print(f"{n},{us:.2f},{d}")
+
+
 def main() -> None:
     argv = sys.argv[1:]
     if argv and argv[0] == "--smoke":
         smoke(*argv[1:2])
         return
+    if argv and argv[0] == "--sweep":
+        sweep(argv[1:])
+        return
     from benchmarks import (bench_activations, bench_cells, bench_energy,
-                            bench_resources, bench_throughput)
+                            bench_pareto, bench_resources, bench_throughput)
     suites = {
         "table1": bench_activations.run,
         "table3": bench_throughput.run,
         "table4": bench_energy.run,
         "fig45": bench_resources.run,
         "cells": bench_cells.run,
+        "pareto": bench_pareto.run,
     }
     want = argv or list(suites)
     print("name,us_per_call,derived")

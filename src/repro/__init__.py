@@ -9,7 +9,22 @@ The front door is the session API (docs/API.md)::
     acc = repro.build(model_cfg, accel_cfg)   # Table-2 parameters in
     acc.train_qat(data).quantize()            # QAT -> integer codes
     y = acc.infer(x, path="int")              # bit-exact datapath out
+
+``repro.explore`` searches the configuration space instead of building one
+point (docs/API.md §Design-space exploration)::
+
+    session = repro.explore.autotune(objective="gops_per_watt",
+                                     constraints={"total_w": (None, 61.0)})
 """
 from repro.api import Accelerator, build  # noqa: F401
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
+
+
+def __getattr__(name):
+    # Lazy: `repro.explore` without paying its import cost on every
+    # `import repro` (it pulls in the benchmark-measurement machinery).
+    if name == "explore":
+        import repro.explore as explore
+        return explore
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

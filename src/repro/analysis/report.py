@@ -1,8 +1,14 @@
-"""Render the dry-run sweep JSON into the EXPERIMENTS.md §Dry-run and
-§Roofline tables (and §Perf before/after deltas vs a baseline sweep).
+"""Render sweep JSON artifacts into EXPERIMENTS.md-ready markdown tables.
+
+Dry-run sweeps (§Dry-run / §Roofline, plus §Perf deltas vs a baseline):
 
   PYTHONPATH=src python -m repro.analysis.report results/dryrun.json \
       [--baseline results/dryrun_baseline.json]
+
+Design-space sweeps (the ``BENCH_pareto.json`` written by
+``benchmarks/run.py --sweep``; Pareto-front rows are bolded):
+
+  PYTHONPATH=src python -m repro.analysis.report --pareto BENCH_pareto.json
 """
 
 from __future__ import annotations
@@ -100,12 +106,46 @@ def perf_delta_table(rs: List[Dict], base: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def pareto_table(payload: Dict) -> str:
+    """The §Design-space table: one row per swept point, front rows bold.
+
+    ``payload`` is the ``BENCH_pareto.json`` schema from
+    ``repro.explore.sweep`` (see tests/test_explore.py)."""
+    objectives = ", ".join(f"{k} ({v})"
+                           for k, v in payload["objectives"].items())
+    out = [f"Objectives: {objectives}.  Front: "
+           f"{len(payload['front'])}/{len(payload['points'])} points.", "",
+           "| config | backend | samples/s | GOP/s | GOP/s/W | total W | "
+           "int-vs-float MSE | weights | front |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in payload["points"]:
+        if r["status"] != "ok":
+            out.append(f"| {r['label']} | — | {r['status']}: "
+                       f"{r.get('reason', '')[:60]} | | | | | | |")
+            continue
+        m = r["metrics"]
+        b = "**" if r["pareto"] else ""
+        out.append(
+            f"| {b}{r['label']}{b} | {r['plan']['backend']} | "
+            f"{m['samples_per_s']:,.0f} | {m['throughput_gops']:.3f} | "
+            f"{m['gops_per_watt']:.4f} | {m['total_w']:.1f} | "
+            f"{m['int_float_mse']:.2e} | {_fmt_bytes(m['weight_bytes'])} | "
+            f"{'yes' if r['pareto'] else ''} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("results")
     ap.add_argument("--baseline", default=None)
+    ap.add_argument("--pareto", action="store_true",
+                    help="results is a BENCH_pareto.json design-space sweep")
     args = ap.parse_args()
     rs = json.load(open(args.results))
+    if args.pareto:
+        print("## §Design-space — measured sweep + Pareto front\n")
+        print(pareto_table(rs))
+        return
     print("## §Dry-run — single-pod 16x16 (256 chips)\n")
     print(dryrun_table(rs, "16x16"))
     print("\n## §Dry-run — multi-pod 2x16x16 (512 chips)\n")

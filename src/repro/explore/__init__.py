@@ -1,0 +1,49 @@
+"""Design-space exploration over the parameterised accelerator.
+
+The paper's claim is not one good configuration but a *parameterised
+design*: Table-2 meta-parameters span a space of accelerators, each scored
+by throughput (GOP/s), energy efficiency (GOP/s/W) and accuracy.  This
+package makes that claim executable:
+
+    from repro import explore
+
+    space = explore.paper_space()            # Table-4 axes as a SearchSpace
+    result = explore.sweep(space, iters=5)   # build+measure every point
+    front = [p for p in result["points"] if p["pareto"]]
+
+    session = explore.autotune(              # best deployable session
+        objective="gops_per_watt",
+        constraints={"samples_per_s": (30_000, None)})
+
+Layout:
+
+  * ``space``    — :class:`SearchSpace` / :class:`Point` over the Table-2
+                   axes (fxp, hs_method, compute_unit, alu_mode, layer
+                   width/depth, serve batch, backend).
+  * ``measure``  — :func:`evaluate_point` / :func:`sweep`: build each point
+                   through ``repro.build``, time the jitted int path, score
+                   with the energy model and the float-reference deviation.
+  * ``pareto``   — :func:`dominates` / :func:`pareto_front` /
+                   :func:`pareto_indices` (any number of objectives,
+                   max/min senses).
+  * ``autotune`` — :func:`autotune`: constrained argmax on the feasible
+                   Pareto front, returning a quantised ``Accelerator``.
+
+``benchmarks/run.py --sweep`` drives :func:`sweep` into
+``BENCH_pareto.json``; ``repro.analysis.report --pareto`` renders that
+artifact as a markdown table.
+"""
+
+from repro.explore.autotune import autotune  # noqa: F401
+from repro.explore.measure import (METRIC_KEYS, SCHEMA_VERSION,  # noqa: F401
+                                   evaluate_point, sweep)
+from repro.explore.pareto import (DEFAULT_OBJECTIVES, dominates,  # noqa: F401
+                                  pareto_front, pareto_indices)
+from repro.explore.space import (AXES, Point, SearchSpace,  # noqa: F401
+                                 paper_space, smoke_space)
+
+__all__ = [
+    "AXES", "DEFAULT_OBJECTIVES", "METRIC_KEYS", "Point", "SCHEMA_VERSION",
+    "SearchSpace", "autotune", "dominates", "evaluate_point", "paper_space",
+    "pareto_front", "pareto_indices", "smoke_space", "sweep",
+]

@@ -1,0 +1,131 @@
+"""``autotune`` — from a search space to the best deployable session.
+
+The paper's workflow, automated: sweep the parameterised design, keep the
+points that satisfy the deployment constraints (a power envelope, a
+real-time samples/s floor, an accuracy budget), and return the
+``Accelerator`` session for the point that maximises the objective among
+the Pareto-optimal survivors.  The returned session is rebuilt and
+quantised — ready for ``infer``/``serve`` — and carries the sweep evidence
+in ``session.autotune_summary``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.api import Accelerator, build
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.qlstm import QLSTMConfig
+from repro.explore.measure import sweep, validate_metric_names
+from repro.explore.pareto import DEFAULT_OBJECTIVES, pareto_indices
+from repro.explore.space import SearchSpace, paper_space, point_from_config
+
+# Senses for objectives/constraints whose "better" direction isn't "bigger".
+_MINIMISE = ("int_float_mse", "int_float_max_abs", "total_w", "dynamic_w",
+             "energy_j_per_wave", "us_per_wave", "weight_bytes")
+
+Constraint = Union[Tuple[Optional[float], Optional[float]], Callable]
+
+
+def _satisfies(metrics: Mapping, constraints: Mapping[str, Constraint]) -> bool:
+    for name, c in constraints.items():
+        if callable(c):
+            if not c(metrics):
+                return False
+            continue
+        lo, hi = c
+        v = float(metrics[name])
+        if lo is not None and v < lo:
+            return False
+        if hi is not None and v > hi:
+            return False
+    return True
+
+
+def autotune(model: Optional[QLSTMConfig] = None,
+             space: Optional[SearchSpace] = None, *,
+             accel: Optional[AcceleratorConfig] = None,
+             objective: str = "gops_per_watt",
+             constraints: Optional[Mapping[str, Constraint]] = None,
+             mode: str = "grid", n: Optional[int] = None, seed: int = 0,
+             iters: int = 20, eval_x: Optional[np.ndarray] = None,
+             payload: Optional[Dict] = None,
+             log: Optional[Callable[[str], None]] = None) -> Accelerator:
+    """Search ``space`` and return the best buildable session.
+
+    ``objective`` is a sweep metric name (maximised, unless it is a
+    cost-like metric — see ``_MINIMISE``).  ``constraints`` maps metric
+    names to ``(min, max)`` bounds (``None`` = unbounded) or to a predicate
+    over the metrics dict, e.g.::
+
+        autotune(cfg, space,
+                 objective="gops_per_watt",
+                 constraints={"total_w": (None, 61.0),        # power cap
+                              "samples_per_s": (30_000, None)})  # real-time
+
+    The winner is chosen on the Pareto front *of the feasible points* (the
+    front is recomputed after filtering, so a constraint that excludes the
+    unconstrained front still yields the constrained optimum).  Raises
+    ``ValueError`` when no evaluated point satisfies the constraints.
+
+    ``model``/``accel`` carry the non-swept base configuration, exactly as
+    they do for :func:`repro.explore.sweep`.
+
+    ``payload`` reuses an existing sweep result (the dict from
+    :func:`repro.explore.sweep`, or a loaded ``BENCH_pareto.json``) instead
+    of re-measuring; the winning session is rebuilt from the recorded point
+    config *with the payload's recorded init seed*, so the deployed weights
+    are the ones the stored metrics (and the constraint selection) actually
+    describe.  ``model``/``accel`` must then match the sweep's bases."""
+    constraints = dict(constraints or {})
+    validate_metric_names([objective], "objective")
+    validate_metric_names([k for k, c in constraints.items()
+                           if not callable(c)], "constraint")
+    sense = "min" if objective in _MINIMISE else "max"
+    objectives = dict(DEFAULT_OBJECTIVES)
+    objectives[objective] = sense
+
+    if payload is None:
+        space = space or paper_space()
+        payload = sweep(space, model, accel, mode=mode, n=n, seed=seed,
+                        iters=iters, eval_x=eval_x, objectives=objectives,
+                        log=log)
+    ok = [r for r in payload["points"] if r["status"] == "ok"]
+    feasible = [r for r in ok if _satisfies(r["metrics"], constraints)]
+    if not feasible:
+        raise ValueError(
+            f"no feasible point: {len(ok)} evaluated, none satisfy "
+            f"{constraints!r} (closest metrics: "
+            f"{[r['metrics'].get(k) for r in ok[:3] for k in constraints]})")
+
+    front_idx = pareto_indices(feasible, objectives,
+                               key=lambda r: r["metrics"])
+    front = [feasible[i] for i in front_idx]
+    signed = ((lambda v: -v) if sense == "min" else (lambda v: v))
+    best = max(front, key=lambda r: signed(float(r["metrics"][objective])))
+
+    model_cfg, accel_cfg = point_from_config(best["config"]).configs(model,
+                                                                     accel)
+    # A stored payload was measured with ITS seed; rebuilding with any other
+    # would deploy weights the selected metrics never described.
+    session = build(model_cfg, accel_cfg,
+                    seed=payload.get("seed", seed)).quantize()
+    session.autotune_summary = {
+        "objective": objective,
+        "sense": sense,
+        "constraints": {k: (repr(c) if callable(c) else list(c))
+                        for k, c in constraints.items()},
+        "best": best,
+        "front": [r["label"] for r in front],
+        "n_evaluated": len(ok),
+        "n_feasible": len(feasible),
+        "sweep": payload,
+    }
+    if log:
+        log(f"[autotune] best={best['label']} "
+            f"{objective}={best['metrics'][objective]:.4g} "
+            f"({len(front)} on the feasible front, "
+            f"{len(feasible)}/{len(ok)} feasible)")
+    return session

@@ -1,0 +1,181 @@
+"""Score one configuration point / sweep a whole space through the session
+API.
+
+Every point is evaluated exactly the way a user would deploy it:
+``repro.build(model, accel).quantize()``, then the cached jitted int-path
+entry (``Accelerator.compiled``) is timed — compile outside the clock — and
+``Accelerator.report()`` is re-anchored at the *measured* latency so the
+energy model scores the real operating point, not the paper's.  Accuracy is
+the int datapath's deviation from the float reference on shared inputs (the
+quantisation-fidelity axis of the trade-off).
+
+The sweep payload (``BENCH_pareto.json``) is the artifact CI uploads and
+``analysis/report.py --pareto`` renders; its schema is pinned by
+``tests/test_explore.py``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import backends
+from repro.api import build
+from repro.core.accelerator import AcceleratorConfig
+from repro.core.qlstm import QLSTMConfig
+from repro.explore.pareto import DEFAULT_OBJECTIVES, pareto_indices
+from repro.explore.space import Point, SearchSpace
+
+SCHEMA_VERSION = 1
+
+# Every metric a sweep row carries — the vocabulary objectives and
+# constraints may reference.  Validated BEFORE the measurement loop, so a
+# typo fails in milliseconds instead of as a KeyError after minutes of
+# timed builds.
+METRIC_KEYS = frozenset({
+    "us_per_wave", "samples_per_s", "throughput_gops", "gops_per_watt",
+    "total_w", "dynamic_w", "energy_j_per_wave", "int_float_mse",
+    "int_float_max_abs", "weight_bytes", "ops_per_inference",
+})
+
+
+def validate_metric_names(names, what: str) -> None:
+    unknown = sorted(set(names) - METRIC_KEYS)
+    if unknown:
+        raise ValueError(f"unknown {what} metric(s) {unknown}; "
+                         f"known: {sorted(METRIC_KEYS)}")
+
+
+def _eval_batch(point: Point, model: QLSTMConfig,
+                eval_x: Optional[np.ndarray], seed: int) -> jax.Array:
+    """A (batch, T, M) float evaluation wave: user data when given (tiled to
+    the wave size), else synthetic windows in the normalised input range."""
+    b, t, m = point.batch, model.seq_len, model.input_size
+    if eval_x is not None:
+        x = np.asarray(eval_x, np.float32)
+        if x.shape[1:] != (t, m):
+            raise ValueError(f"eval_x windows are {x.shape[1:]}, the swept "
+                             f"model needs ({t}, {m})")
+        reps = -(-b // len(x))
+        return jnp.asarray(np.tile(x, (reps, 1, 1))[:b])
+    return jax.random.normal(jax.random.key(seed), (b, t, m)) * 0.5
+
+
+def evaluate_point(point: Point, base_model: Optional[QLSTMConfig] = None,
+                   base_accel: Optional[AcceleratorConfig] = None,
+                   *, eval_x: Optional[np.ndarray] = None, iters: int = 20,
+                   seed: int = 0) -> Dict:
+    """Build, quantise, time, and score one configuration point.
+
+    ``base_model``/``base_accel`` carry the non-swept parameters (see
+    ``Point.configs``).  Returns the sweep-row dict (``status`` is ``"ok"``
+    here; ``sweep`` records unsupported points instead of raising)."""
+    model_cfg, accel_cfg = point.configs(base_model, base_accel)
+    sess = build(model_cfg, accel_cfg, seed=seed).quantize()
+    x = _eval_batch(point, sess.model, eval_x, seed)
+
+    fn = sess.compiled("int")
+    fn(x).block_until_ready()               # compile outside the clock
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(x)
+    out.block_until_ready()
+    wave_s = (time.perf_counter() - t0) / iters
+
+    report = sess.report(latency_s=wave_s, batch=point.batch)
+    energy = report["energy"]
+    y_int = np.asarray(out)
+    y_float = np.asarray(sess.infer(x, path="float"))
+    err = y_int - y_float
+
+    return {
+        "label": point.label,
+        "config": point.asdict(),
+        "status": "ok",
+        "plan": {
+            "backend": report["backend"],
+            "weight_memory": report["plan"]["weight_memory"],
+            "weight_bytes": report["weight_bytes"],
+            "mxu_fill_fraction": report["plan"]["mxu_fill_fraction"],
+        },
+        "metrics": {
+            "us_per_wave": wave_s * 1e6,
+            "samples_per_s": point.batch / wave_s,
+            "throughput_gops": energy["throughput_gops"],
+            "gops_per_watt": energy["gops_per_watt"],
+            "total_w": energy["total_w"],
+            "dynamic_w": energy["dynamic_w"],
+            "energy_j_per_wave": energy["energy_j"],
+            "int_float_mse": float(np.mean(err ** 2)),
+            "int_float_max_abs": float(np.abs(err).max()),
+            "weight_bytes": report["weight_bytes"],
+            "ops_per_inference": report["ops_per_inference"],
+        },
+    }
+
+
+def sweep(space: SearchSpace, base_model: Optional[QLSTMConfig] = None,
+          base_accel: Optional[AcceleratorConfig] = None, *,
+          mode: str = "grid", n: Optional[int] = None, seed: int = 0,
+          iters: int = 20, eval_x: Optional[np.ndarray] = None,
+          objectives: Optional[Mapping[str, str]] = None,
+          log: Optional[Callable[[str], None]] = None) -> Dict:
+    """Evaluate every point of ``space`` (``mode="grid"``) or ``n`` sampled
+    points (``mode="random"``) and extract the Pareto front.
+
+    Points whose explicit backend cannot run the configuration are recorded
+    with ``status="unsupported"`` (and excluded from the front) rather than
+    aborting the sweep — an infeasible corner is a sweep *finding*."""
+    if mode == "grid":
+        points = list(space.grid())
+    elif mode == "random":
+        if n is None:
+            raise ValueError("mode='random' needs n=<points to sample>")
+        points = list(space.sample(n, seed))
+    else:
+        raise ValueError(f"mode must be 'grid'|'random', got {mode!r}")
+    objectives = dict(objectives or DEFAULT_OBJECTIVES)
+    validate_metric_names(objectives, "objective")
+    for sense in objectives.values():
+        if sense not in ("max", "min"):
+            raise ValueError(f"objective sense must be 'max'|'min', "
+                             f"got {sense!r}")
+
+    rows: List[Dict] = []
+    for i, point in enumerate(points):
+        try:
+            row = evaluate_point(point, base_model, base_accel,
+                                 eval_x=eval_x, iters=iters, seed=seed)
+        except backends.BackendUnsupported as e:
+            row = {"label": point.label, "config": point.asdict(),
+                   "status": "unsupported", "reason": str(e)}
+        rows.append(row)
+        if log:
+            m = row.get("metrics", {})
+            log(f"[sweep {i + 1}/{len(points)}] {row['label']}: "
+                + (f"{m['samples_per_s']:,.0f} samples/s, "
+                   f"{m['gops_per_watt']:.3f} GOP/s/W"
+                   if row["status"] == "ok" else row["status"]))
+
+    ok = [r for r in rows if r["status"] == "ok"]
+    front = pareto_indices(ok, objectives, key=lambda r: r["metrics"])
+    on_front = {ok[i]["label"] for i in front}
+    for r in rows:
+        r["pareto"] = r["label"] in on_front
+    return {
+        "suite": "pareto",
+        "schema_version": SCHEMA_VERSION,
+        "mode": mode,
+        # The init seed the measured sessions were built with — autotune
+        # rebuilds the winner from a stored payload with THIS seed, so the
+        # deployed weights are the ones the metrics describe.
+        "seed": seed,
+        "space": space.asdict(),
+        "objectives": objectives,
+        "points": rows,
+        "front": [ok[i]["label"] for i in front],
+    }

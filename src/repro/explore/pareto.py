@@ -1,0 +1,73 @@
+"""Pareto-dominance and front extraction over sweep metrics.
+
+Objectives are a mapping ``{metric_name: "max" | "min"}`` — the paper's
+pair is ``{"throughput_gops": "max", "gops_per_watt": "max"}``; adding
+``{"int_float_mse": "min"}`` gives the 3-objective accuracy-aware front.
+Points are plain mappings (metric name -> value), or arbitrary items with a
+``key=`` extractor.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+# The paper scores a configuration by throughput and energy efficiency
+# (GOP/s and GOP/s/W, Table 4).
+DEFAULT_OBJECTIVES: Dict[str, str] = {
+    "throughput_gops": "max",
+    "gops_per_watt": "max",
+}
+
+_SENSES = ("max", "min")
+
+
+def _signed(value: float, sense: str) -> float:
+    if sense not in _SENSES:
+        raise ValueError(f"objective sense must be 'max'|'min', got {sense!r}")
+    return value if sense == "max" else -value
+
+
+def dominates(a: Mapping, b: Mapping,
+              objectives: Optional[Mapping[str, str]] = None) -> bool:
+    """True iff ``a`` is at least as good as ``b`` on every objective and
+    strictly better on at least one.  Identical points never dominate each
+    other (both stay on the front)."""
+    objectives = objectives or DEFAULT_OBJECTIVES
+    strictly_better = False
+    for name, sense in objectives.items():
+        av = _signed(float(a[name]), sense)
+        bv = _signed(float(b[name]), sense)
+        if av < bv:
+            return False
+        if av > bv:
+            strictly_better = True
+    return strictly_better
+
+
+def _finite(m: Mapping, objectives: Mapping[str, str]) -> bool:
+    return all(math.isfinite(float(m[name])) for name in objectives)
+
+
+def pareto_indices(items: Sequence,
+                   objectives: Optional[Mapping[str, str]] = None,
+                   key: Optional[Callable] = None) -> List[int]:
+    """Indices of the non-dominated items, in input order.
+
+    Items with a non-finite (NaN/inf) objective value are excluded — a
+    failed measurement must not survive as "incomparable, therefore
+    optimal".  O(n^2); sweeps are hundreds of points, not millions."""
+    objectives = objectives or DEFAULT_OBJECTIVES
+    key = key or (lambda it: it)
+    metrics = [key(it) for it in items]
+    valid = [i for i, m in enumerate(metrics) if _finite(m, objectives)]
+    return [i for i in valid
+            if not any(dominates(metrics[j], metrics[i], objectives)
+                       for j in valid if j != i)]
+
+
+def pareto_front(items: Sequence,
+                 objectives: Optional[Mapping[str, str]] = None,
+                 key: Optional[Callable] = None) -> List:
+    """The non-dominated items themselves (see :func:`pareto_indices`)."""
+    return [items[i] for i in pareto_indices(items, objectives, key)]

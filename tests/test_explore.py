@@ -1,0 +1,293 @@
+"""Design-space explorer: Pareto dominance, the sweep artifact schema, and
+constrained autotune.
+
+The sweep tests run the same deterministic 4-point smoke space CI sweeps
+(``benchmarks/run.py --sweep --smoke``) and assert the ``BENCH_pareto.json``
+schema plus dominance-correctness of the extracted front — timing values
+themselves are machine-dependent and never asserted."""
+
+import json
+import math
+
+import pytest
+
+from repro import explore
+from repro.core.fixed_point import FXP_4_8, FXP_8_16, FixedPointConfig
+from repro.core.qlstm import QLSTMConfig
+
+# ---------------------------------------------------------------------------
+# Pareto dominance / front extraction (pure, no jax)
+# ---------------------------------------------------------------------------
+
+MAXMIN = {"gops": "max", "mse": "min"}
+
+
+def test_dominates_basic_and_senses():
+    a = {"gops": 2.0, "mse": 0.1}
+    b = {"gops": 1.0, "mse": 0.2}
+    assert explore.dominates(a, b, MAXMIN)
+    assert not explore.dominates(b, a, MAXMIN)
+    # better on one axis, worse on the other: neither dominates
+    c = {"gops": 1.0, "mse": 0.05}
+    assert not explore.dominates(a, c, MAXMIN)
+    assert not explore.dominates(c, a, MAXMIN)
+
+
+def test_dominates_ties():
+    a = {"gops": 2.0, "mse": 0.1}
+    same = dict(a)
+    assert not explore.dominates(a, same, MAXMIN)
+    assert not explore.dominates(same, a, MAXMIN)
+    # equal on one objective, strictly better on the other: dominates
+    better = {"gops": 2.0, "mse": 0.05}
+    assert explore.dominates(better, a, MAXMIN)
+    assert not explore.dominates(a, better, MAXMIN)
+
+
+def test_pareto_front_hand_built_2d():
+    pts = [
+        {"gops": 3.0, "mse": 0.3},   # front
+        {"gops": 2.0, "mse": 0.1},   # front
+        {"gops": 1.0, "mse": 0.2},   # dominated by the one above
+        {"gops": 3.0, "mse": 0.3},   # duplicate of a front point: kept
+        {"gops": 0.5, "mse": 0.4},   # dominated by everything
+    ]
+    idx = explore.pareto_indices(pts, MAXMIN)
+    assert idx == [0, 1, 3]
+    assert explore.pareto_front(pts, MAXMIN) == [pts[0], pts[1], pts[3]]
+
+
+def test_pareto_front_three_objectives():
+    obj = {"gops": "max", "gops_w": "max", "mse": "min"}
+    pts = [
+        {"gops": 3.0, "gops_w": 1.0, "mse": 0.30},  # fastest
+        {"gops": 1.0, "gops_w": 3.0, "mse": 0.30},  # most efficient
+        {"gops": 1.0, "gops_w": 1.0, "mse": 0.01},  # most accurate
+        {"gops": 1.0, "gops_w": 1.0, "mse": 0.30},  # dominated by all three
+    ]
+    assert explore.pareto_indices(pts, obj) == [0, 1, 2]
+    # dropping the accuracy objective collapses the accurate point too
+    assert explore.pareto_indices(pts, {"gops": "max", "gops_w": "max"}) \
+        == [0, 1]
+
+
+def test_pareto_front_excludes_non_finite():
+    pts = [
+        {"gops": float("nan"), "mse": 0.0},   # failed measurement
+        {"gops": float("inf"), "mse": 0.1},   # bogus timer
+        {"gops": 1.0, "mse": 0.2},
+    ]
+    assert explore.pareto_indices(pts, MAXMIN) == [2]
+
+
+def test_dominates_rejects_bad_sense():
+    with pytest.raises(ValueError, match="sense"):
+        explore.dominates({"g": 1}, {"g": 2}, {"g": "maximize"})
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace
+# ---------------------------------------------------------------------------
+
+def test_search_space_size_grid_and_sample():
+    s = explore.SearchSpace(fxp=(FXP_4_8, FXP_8_16),
+                            alu_mode=("pipelined", "per_step"),
+                            hidden_size=(8, 20))
+    assert s.size == 8
+    grid = list(s.grid())
+    assert len(grid) == 8 and len({p.label for p in grid}) == 8
+    sampled = s.sample(3, seed=0)
+    assert len(sampled) == 3 and len(set(sampled)) == 3
+    assert s.sample(3, seed=0) == sampled          # deterministic
+    assert set(s.sample(99, seed=1)) == set(grid)  # n >= size: whole grid
+    # singletons auto-wrap
+    assert explore.SearchSpace(hidden_size=16).hidden_size == (16,)
+
+
+def test_search_space_validation():
+    with pytest.raises(ValueError, match="hs_method"):
+        explore.SearchSpace(hs_method=("bogus",))
+    with pytest.raises(ValueError, match="no choices"):
+        explore.SearchSpace(batch=())
+    with pytest.raises(ValueError, match="positive ints"):
+        explore.SearchSpace(hidden_size=(0,))
+
+
+def test_point_configs_and_roundtrip():
+    p = next(iter(explore.SearchSpace(fxp=FXP_8_16, alu_mode="per_step",
+                                      hidden_size=12, batch=7).grid()))
+    base = QLSTMConfig(input_size=3, seq_len=9)
+    model, accel = p.configs(base)
+    assert model.hidden_size == 12 and model.input_size == 3 \
+        and model.seq_len == 9
+    assert accel.fxp == FXP_8_16 and accel.alu_mode == "per_step"
+    from repro.explore.space import point_from_config
+    assert point_from_config(p.asdict()) == p
+    assert isinstance(point_from_config(p.asdict()).fxp, FixedPointConfig)
+
+
+# ---------------------------------------------------------------------------
+# The smoke sweep: schema + dominance correctness (the CI artifact)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_payload(tmp_path_factory):
+    """One shared ``--sweep --smoke`` run, through the benchmark writer so
+    the on-disk artifact is what gets schema-checked."""
+    from benchmarks.bench_pareto import write_sweep
+    out = tmp_path_factory.mktemp("sweep") / "BENCH_pareto.json"
+    write_sweep(str(out), smoke=True, iters=2)
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_smoke_sweep_schema(smoke_payload):
+    p = smoke_payload
+    assert p["suite"] == "pareto"
+    assert p["schema_version"] == explore.SCHEMA_VERSION
+    assert p["mode"] == "grid"
+    assert isinstance(p["seed"], int)
+    assert set(p["space"]) == set(explore.AXES)
+    assert all(v in ("max", "min") for v in p["objectives"].values())
+    assert len(p["points"]) >= 4
+    for r in p["points"]:
+        assert set(r) >= {"label", "config", "status", "pareto"}
+        assert set(r["config"]) == set(explore.AXES)
+        if r["status"] == "ok":
+            assert set(r["metrics"]) >= {
+                "us_per_wave", "samples_per_s", "throughput_gops",
+                "gops_per_watt", "total_w", "int_float_mse",
+                "int_float_max_abs", "weight_bytes"}
+            assert r["plan"]["backend"] in ("ref", "pallas", "xla")
+            assert all(math.isfinite(v) for v in r["metrics"].values()
+                       if isinstance(v, float))
+
+
+def test_smoke_sweep_front_dominance_correct(smoke_payload):
+    p = smoke_payload
+    ok = [r for r in p["points"] if r["status"] == "ok"]
+    assert len(ok) >= 4
+    front = [r for r in ok if r["pareto"]]
+    assert front and sorted(p["front"]) == sorted(r["label"] for r in front)
+    obj = p["objectives"]
+    for r in front:                      # nothing dominates a front point
+        assert not any(explore.dominates(o["metrics"], r["metrics"], obj)
+                       for o in ok)
+    for r in ok:                         # every non-front point is dominated
+        if not r["pareto"]:
+            assert any(explore.dominates(f["metrics"], r["metrics"], obj)
+                       for f in front), r["label"]
+
+
+def test_sweep_records_unsupported_backend_instead_of_raising():
+    # per-step ALU is exactly what the fused engines refuse: explicit
+    # backend=pallas must surface as an 'unsupported' row, not an exception
+    space = explore.SearchSpace(alu_mode="per_step", backend="pallas",
+                                batch=4)
+    payload = explore.sweep(space, iters=1)
+    (row,) = payload["points"]
+    assert row["status"] == "unsupported" and "pallas" in row["reason"]
+    assert payload["front"] == [] and row["pareto"] is False
+
+
+def test_sweep_respects_base_model_and_eval_x():
+    import numpy as np
+    base = QLSTMConfig(input_size=2, seq_len=4)
+    space = explore.SearchSpace(backend="ref", batch=4, hidden_size=8)
+    x = np.zeros((3, 4, 2), np.float32)
+    payload = explore.sweep(space, base, iters=1, eval_x=x)
+    (row,) = payload["points"]
+    assert row["status"] == "ok"
+    with pytest.raises(ValueError, match="windows"):
+        explore.sweep(space, base, iters=1,
+                      eval_x=np.zeros((3, 6, 1), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# autotune: constrained argmax on the feasible front (ref backend)
+# ---------------------------------------------------------------------------
+
+def test_autotune_constraint_satisfaction_ref_backend():
+    import repro
+    space = explore.SearchSpace(fxp=(FXP_4_8, FXP_8_16), backend="ref",
+                                batch=8)
+    # (8,16) is ~256x more accurate; bound int_float_mse so only it is
+    # feasible regardless of which format happens to measure faster.
+    session = explore.autotune(
+        space=space, iters=2,
+        constraints={"int_float_mse": (None, 1e-4)})
+    assert isinstance(session, repro.Accelerator)
+    assert session.accel.fxp == FXP_8_16
+    assert session.plan["backend"] == "ref"
+    assert session.qparams is not None     # ready to infer/serve
+
+    s = session.autotune_summary
+    assert s["best"]["label"] in s["front"]
+    assert s["best"]["metrics"]["int_float_mse"] <= 1e-4
+    # the winner maximises the objective over the feasible front
+    feasible = [r for r in s["sweep"]["points"]
+                if r["status"] == "ok"
+                and r["metrics"]["int_float_mse"] <= 1e-4]
+    best_val = max(r["metrics"]["gops_per_watt"] for r in feasible)
+    assert s["best"]["metrics"]["gops_per_watt"] == best_val
+
+    # and the built session actually runs the winning configuration
+    import jax
+    y = session.infer(jax.random.normal(jax.random.key(0), (4, 6, 1)),
+                      path="int")
+    assert y.shape == (4, 1)
+
+
+def test_autotune_infeasible_constraints_raise():
+    space = explore.SearchSpace(backend="ref", batch=4)
+    with pytest.raises(ValueError, match="no feasible point"):
+        explore.autotune(space=space, iters=1,
+                         constraints={"samples_per_s": (1e18, None)})
+
+
+def test_autotune_reuses_payload_without_resweeping():
+    import jax
+    import repro
+    from repro.explore.space import point_from_config
+
+    space = explore.SearchSpace(fxp=(FXP_4_8, FXP_8_16), backend="ref",
+                                batch=8)
+    payload = explore.sweep(space, iters=2, seed=3)
+    assert payload["seed"] == 3
+    calls = []
+    session = explore.autotune(payload=payload, objective="int_float_mse",
+                               log=calls.append)
+    # objective is cost-like -> minimised -> the (8,16) point wins
+    assert session.accel.fxp == FXP_8_16
+    assert session.autotune_summary["sense"] == "min"
+    assert not any("/2]" in c for c in calls)   # no sweep progress lines
+    # rebuilt with the PAYLOAD's seed: the deployed weights are the ones
+    # the stored metrics were measured on
+    cfgs = point_from_config(session.autotune_summary["best"]["config"])
+    want = repro.build(*cfgs.configs(), seed=3).params
+    assert all(bool((a == b).all()) for a, b in
+               zip(jax.tree.leaves(session.params), jax.tree.leaves(want)))
+
+
+def test_sweep_and_autotune_validate_metric_names_upfront():
+    space = explore.SearchSpace(backend="ref", batch=4)
+    with pytest.raises(ValueError, match="unknown objective.*gops_per_wat"):
+        explore.sweep(space, objectives={"gops_per_wat": "max"})
+    with pytest.raises(ValueError, match="sense"):
+        explore.sweep(space, objectives={"gops_per_watt": "maximize"})
+    with pytest.raises(ValueError, match="unknown objective"):
+        explore.autotune(space=space, objective="latency")
+    with pytest.raises(ValueError, match="unknown constraint"):
+        explore.autotune(space=space, constraints={"watts": (None, 1.0)})
+
+
+def test_sweep_base_accel_is_honoured():
+    from repro.core.accelerator import AcceleratorConfig
+    space = explore.SearchSpace(backend="ref", batch=4)
+    payload = explore.sweep(space, None, AcceleratorConfig(ht_max=0.5),
+                            iters=1)
+    (row,) = payload["points"]
+    assert row["status"] == "ok"
+    session = explore.autotune(space=space, iters=1,
+                               accel=AcceleratorConfig(ht_max=0.5))
+    assert session.model.acts.ht_max == 0.5
