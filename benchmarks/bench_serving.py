@@ -1,0 +1,121 @@
+"""Streaming-serving benchmark — achieved samples/s vs the paper's §6
+headline (32 873 samples/s at 11.89 GOP/s/W on the XC7S15).
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [out.json]
+
+Two scenarios through `repro.serving`:
+
+  * ``stateless`` — the ``Accelerator.serve`` wave path (the paper's
+    single-stream real-time deployment, batched).
+  * ``stateful``  — many named client streams multiplexed through
+    ``StreamServer`` with cross-window (h, c) carry (the ROADMAP's
+    many-user scenario; one window per stream per wave).
+
+Writes ``BENCH_serving.json``: per-scenario achieved samples/s, per-wave
+latency p50/p95/p99, GOP/s/W at the measured operating point, and the
+paper reference numbers.  Render with
+``python -m repro.analysis.report --serving BENCH_serving.json``.
+CI runs ``--smoke`` (small waves, CPU interpret mode) and uploads the
+artifact — the numbers track the perf trajectory, not the FPGA's.
+"""
+
+import json
+import sys
+
+PAPER_SAMPLES_PER_S = 32873.0     # §6, XC7S15 @ 204 MHz
+PAPER_GOPS_PER_WATT = 11.89       # Table 4
+
+SCHEMA_VERSION = 1
+
+
+def _scenario_stateless(sess, n_windows, batch):
+    """Ordered stateless serving (the Accelerator.serve path)."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    model = sess.model
+    x = rng.uniform(0, 1, (n_windows, model.seq_len,
+                           model.input_size)).astype(np.float32)
+    from repro.serving import ServingConfig, StreamServer
+    cfg = ServingConfig(batch=batch, stateful=False, deadline_s=None)
+    with StreamServer(sess, cfg) as srv:
+        # Warm-up wave compiles the datapath outside the measured interval.
+        for w in x[:batch]:
+            srv.submit(None, w)
+        srv.drain()
+    with StreamServer(sess, cfg) as srv:
+        for w in x:
+            srv.submit(None, w)
+        srv.drain()
+        return srv.metrics_summary()
+
+
+def _scenario_stateful(sess, n_streams, windows_per_stream, batch):
+    """Multiplexed named streams with cross-window carry."""
+    import numpy as np
+    rng = np.random.default_rng(1)
+    model = sess.model
+    xs = rng.uniform(0, 1, (n_streams, windows_per_stream, model.seq_len,
+                            model.input_size)).astype(np.float32)
+    from repro.serving import StreamServer
+    with StreamServer(sess, batch=batch, deadline_s=0.05,
+                      max_streams=max(16, n_streams)) as srv:
+        srv.submit("warmup", xs[0, 0])      # compile outside the clock
+        srv.drain()
+        srv.end_stream("warmup")
+        srv.reset_metrics()                 # compile stays outside the clock
+        for w in range(windows_per_stream):
+            for s in range(n_streams):
+                srv.submit(f"s{s}", xs[s, w])
+        srv.drain()
+        return srv.metrics_summary()
+
+
+def _row(name, summary):
+    return (f"serving_{name}", summary["latency_ms"]["p50"] * 1e3,
+            round(summary["samples_per_s"], 1))
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_serving.json"):
+    """Measure both scenarios and write the JSON payload; returns the
+    CSV-ish rows the benchmark harness prints."""
+    import repro
+    sess = repro.build().quantize()     # the paper's default configuration
+
+    if smoke:
+        stateless = _scenario_stateless(sess, n_windows=64, batch=16)
+        stateful = _scenario_stateful(sess, n_streams=8,
+                                      windows_per_stream=4, batch=8)
+    else:
+        stateless = _scenario_stateless(sess, n_windows=4096, batch=256)
+        stateful = _scenario_stateful(sess, n_streams=128,
+                                      windows_per_stream=16, batch=64)
+
+    payload = {
+        "suite": "serving",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": smoke,
+        "paper": {"samples_per_s": PAPER_SAMPLES_PER_S,
+                  "gops_per_watt": PAPER_GOPS_PER_WATT},
+        "scenarios": {"stateless": stateless, "stateful": stateful},
+    }
+    for s in payload["scenarios"].values():
+        s["vs_paper_samples_per_s"] = s["samples_per_s"] / PAPER_SAMPLES_PER_S
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[serving] wrote {out_path}", file=sys.stderr)
+    return [_row(k, v) for k, v in payload["scenarios"].items()]
+
+
+def main(argv):
+    """CLI: ``[--smoke] [out.json]``."""
+    smoke = "--smoke" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    rows = run(smoke=smoke, out_path=paths[0] if paths
+               else "BENCH_serving.json")
+    print("name,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.2f},{d}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

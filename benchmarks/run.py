@@ -1,8 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [table1 table3 table4 fig45 cells pareto]
+  PYTHONPATH=src python -m benchmarks.run [table1 table3 table4 fig45 cells pareto serving]
   PYTHONPATH=src python -m benchmarks.run --smoke [out.json]
   PYTHONPATH=src python -m benchmarks.run --sweep [--smoke] [out.json]
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [out.json]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 
@@ -84,7 +85,8 @@ def main() -> None:
         sweep(argv[1:])
         return
     from benchmarks import (bench_activations, bench_cells, bench_energy,
-                            bench_pareto, bench_resources, bench_throughput)
+                            bench_pareto, bench_resources, bench_serving,
+                            bench_throughput)
     suites = {
         "table1": bench_activations.run,
         "table3": bench_throughput.run,
@@ -92,6 +94,7 @@ def main() -> None:
         "fig45": bench_resources.run,
         "cells": bench_cells.run,
         "pareto": bench_pareto.run,
+        "serving": bench_serving.run,
     }
     want = argv or list(suites)
     print("name,us_per_call,derived")

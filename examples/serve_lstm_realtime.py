@@ -1,9 +1,13 @@
 """Real-time LSTM inference — the paper's deployment scenario (§6: 32873
-samples/s on the XC7S15 at 204 MHz) — through ``Accelerator.serve``.
+samples/s on the XC7S15 at 204 MHz) — in both serving forms.
 
-Streams windows through the int8 accelerator datapath in fixed-size waves
-(the jitted engine sees one static shape) and reports samples/s plus the
-projected TPU-side GOP/s and GOP/s/W from the energy model.
+Part 1 streams windows through ``Accelerator.serve`` (stateless fixed-size
+waves — the jitted engine sees one static shape) and reports samples/s
+plus the projected TPU-side GOP/s and GOP/s/W from the energy model.
+Part 2 is the production form (docs/SERVING.md): many named sensor
+streams multiplexed through ``repro.serving.StreamServer``, each stream's
+LSTM (h, c) carried across windows — predictions see the stream's whole
+history, not just the current window.
 
 Run:  PYTHONPATH=src python examples/serve_lstm_realtime.py
 """
@@ -15,6 +19,7 @@ import repro
 from repro.core.accelerator import PAPER_DEFAULT, PAPER_NO_MXU
 from repro.core.qlstm import QLSTMConfig
 from repro.data.timeseries import pems_like_dataset
+from repro.serving import StreamServer
 
 cfg = QLSTMConfig()
 data = pems_like_dataset(seq_len=cfg.seq_len)
@@ -46,3 +51,28 @@ for name, accel in [("mxu (DSP)", PAPER_DEFAULT), ("vpu (no-DSP)", PAPER_NO_MXU)
                                          batch=BATCH)["energy"]
     print(f"[energy/{name:12s}] GOP/s/W={rep['gops_per_watt']:.2f} "
           f"total_W={rep['total_w']:.1f} (paper: 11.89 GOP/s/W)")
+
+# --- Part 2: multiplexed STATEFUL streams (repro.serving) -------------------
+# 16 sensors, 8 windows each; every sensor's (h, c) carries across its
+# windows, so window k sees the sensor's whole history — bit-identical to
+# running each sensor's concatenated sequence in one shot.
+N_STREAMS, N_WINDOWS = 16, 8
+with StreamServer(acc, batch=N_STREAMS, deadline_s=0.02,
+                  max_streams=N_STREAMS) as server:
+    server.submit("warmup", x[0])          # compile outside the clock
+    server.drain()
+    server.end_stream("warmup")
+    server.reset_metrics()
+    for w in range(N_WINDOWS):
+        for s in range(N_STREAMS):
+            server.submit(f"sensor-{s}", x[(s * N_WINDOWS + w) % len(x)])
+    server.drain()
+    m = server.metrics_summary()
+print(f"[stream] {m['samples']} windows over {N_STREAMS} stateful streams: "
+      f"{m['samples_per_s']:,.0f} samples/s, "
+      f"p50/p95/p99 = {m['latency_ms']['p50']:.1f}/"
+      f"{m['latency_ms']['p95']:.1f}/{m['latency_ms']['p99']:.1f} ms")
+print(f"[stream] occupancy {m['mean_occupancy']:.1f}/{m['batch']}, "
+      f"deadline flushes {m['deadline_flushes']}, "
+      f"evictions {m['state']['evictions']}, "
+      f"GOP/s/W at measured point {m['gops_per_watt']:.2e}")

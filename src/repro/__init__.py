@@ -18,13 +18,17 @@ point (docs/API.md §Design-space exploration)::
 """
 from repro.api import Accelerator, build  # noqa: F401
 
-__version__ = "0.3.0"
+__version__ = "0.3.1"
 
 
 def __getattr__(name):
-    # Lazy: `repro.explore` without paying its import cost on every
-    # `import repro` (it pulls in the benchmark-measurement machinery).
+    # Lazy: `repro.explore` / `repro.serving` without paying their import
+    # cost on every `import repro` (explore pulls in the benchmark-
+    # measurement machinery; serving the threaded scheduler).
     if name == "explore":
         import repro.explore as explore
         return explore
+    if name == "serving":
+        import repro.serving as serving
+        return serving
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

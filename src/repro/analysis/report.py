@@ -9,6 +9,12 @@ Design-space sweeps (the ``BENCH_pareto.json`` written by
 ``benchmarks/run.py --sweep``; Pareto-front rows are bolded):
 
   PYTHONPATH=src python -m repro.analysis.report --pareto BENCH_pareto.json
+
+Serving runs (the ``BENCH_serving.json`` written by
+``benchmarks/bench_serving.py``; one row per scenario, scored against the
+paper's §6 headline):
+
+  PYTHONPATH=src python -m repro.analysis.report --serving BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -134,17 +140,48 @@ def pareto_table(payload: Dict) -> str:
     return "\n".join(out)
 
 
+def serving_table(payload: Dict) -> str:
+    """The §Serving table: one row per scenario from ``BENCH_serving.json``
+    (see ``benchmarks/bench_serving.py`` for the schema), scored against
+    the paper's §6 reference point."""
+    paper = payload["paper"]
+    out = [f"Paper reference (XC7S15 @ 204 MHz): "
+           f"{paper['samples_per_s']:,.0f} samples/s, "
+           f"{paper['gops_per_watt']:.2f} GOP/s/W.", "",
+           "| scenario | samples/s | vs paper | p50 ms | p95 ms | p99 ms | "
+           "waves | occupancy | deadline flushes | evictions | GOP/s/W |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for name, s in payload["scenarios"].items():
+        lat = s["latency_ms"]
+        ev = (s.get("state") or {}).get("evictions", "—")
+        out.append(
+            f"| {name} | {s['samples_per_s']:,.0f} | "
+            f"{s['vs_paper_samples_per_s']:.2f}x | {lat['p50']:.2f} | "
+            f"{lat['p95']:.2f} | {lat['p99']:.2f} | {s['waves']} | "
+            f"{s['mean_occupancy']:.1f}/{s['batch']} | "
+            f"{s['deadline_flushes']} | {ev} | "
+            f"{s['gops_per_watt']:.4f} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("results")
     ap.add_argument("--baseline", default=None)
     ap.add_argument("--pareto", action="store_true",
                     help="results is a BENCH_pareto.json design-space sweep")
+    ap.add_argument("--serving", action="store_true",
+                    help="results is a BENCH_serving.json serving run")
     args = ap.parse_args()
     rs = json.load(open(args.results))
     if args.pareto:
         print("## §Design-space — measured sweep + Pareto front\n")
         print(pareto_table(rs))
+        return
+    if args.serving:
+        print("## §Serving — streaming subsystem vs the paper's §6 "
+              "deployment\n")
+        print(serving_table(rs))
         return
     print("## §Dry-run — single-pod 16x16 (256 chips)\n")
     print(dryrun_table(rs, "16x16"))

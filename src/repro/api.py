@@ -22,6 +22,11 @@ registry (`repro/backends/`: ``ref`` oracle | fused ``pallas`` kernel |
 entry points are cached per (path, backend) so repeated calls — the
 serving hot path — never retrace.
 
+``serve`` is the stateless compat wrapper; the production streaming layer
+(named client streams, cross-window (h, c) carry, deadline-bounded waves,
+serving metrics) is ``repro.serving.StreamServer``, built on
+``compiled_stateful``/``init_state`` below (docs/SERVING.md).
+
 See docs/API.md for the full lifecycle and the Table-2 parameter mapping.
 """
 
@@ -152,9 +157,10 @@ class Accelerator:
         """Float master weights -> integer codes for the hardware datapath
         (weights in (a,b); biases at the wide accumulator precision)."""
         self.qparams = quantize_params(self.params, self.model)
-        # Cached int-path closures captured the previous codes; drop them.
+        # Cached int-path closures (stateless AND stateful) captured the
+        # previous codes; drop them.
         self._jitted = {k: fn for k, fn in self._jitted.items()
-                        if k[0] != "int"}
+                        if not k[0].startswith("int")}
         return self
 
     # -- inference ----------------------------------------------------------
@@ -182,6 +188,42 @@ class Accelerator:
         ``(B, T, M) float -> (B, P) float``.  Useful for benchmarking the
         datapath without per-call dispatch overhead."""
         return self._fn(path, backend)
+
+    def init_state(self, batch: int):
+        """The reset cross-window carry for ``compiled_stateful``: per-layer
+        zero (h, c) int32 codes of shape (batch, hidden) — what the
+        accelerator's state registers hold before a stream's first
+        window."""
+        from repro.core.qlstm import init_int_state
+        return init_int_state(self.model, batch)
+
+    def compiled_stateful(self, backend: Optional[str] = None):
+        """The cached jitted STATEFUL int-path entry point: a callable
+        ``((B, T, M) float, state) -> ((B, P) float, new_state)`` where
+        ``state`` is the per-layer (h, c) carry (``init_state`` for a fresh
+        stream).  This is the datapath behind ``repro.serving`` — feeding a
+        stream window-by-window with the carried state is bit-identical to
+        one call on the concatenated sequence.  ``backend`` must be
+        stateful-capable (``ref`` | ``xla``; the fused pallas kernel pins
+        the carry at zero, so ``auto`` follows the plan's
+        ``stateful_backend``)."""
+        self._require_quantized()
+        bk = backends.select_stateful(self.model, self.accel,
+                                      override=backend)
+        key = ("int_stateful", bk.name)
+        if key in self._jitted:
+            return self._jitted[key]
+        qparams, model, accel = self.qparams, self.model, self.accel
+
+        def stateful_path(x, state):
+            x_int = fxp.quantize(x, model.fxp)
+            y_int, new_state = bk.run_stateful(qparams, x_int, model, accel,
+                                               state)
+            return fxp.dequantize(y_int, model.fxp), new_state
+
+        fn = jax.jit(stateful_path)
+        self._jitted[key] = fn
+        return fn
 
     def _require_quantized(self):
         if self.qparams is None:
@@ -233,39 +275,25 @@ class Accelerator:
               batch: int = 256, path: str = "int",
               backend: Optional[str] = None) -> Iterator[np.ndarray]:
         """Batched streaming inference — the paper's deployment scenario
-        (§6: real-time samples/s).
+        (§6: real-time samples/s).  Thin compat wrapper over
+        ``repro.serving.serve_windows`` (stateless; for cross-window state
+        carry and multi-client multiplexing use
+        ``repro.serving.StreamServer``).
 
         ``stream`` yields windows of shape (T, M); predictions of shape
-        (P,) are yielded in order.  Windows are assembled into fixed-size
-        waves of ``batch`` (the final partial wave is padded, padding
-        discarded), so the jitted datapath sees one static shape."""
+        (P,) are yielded in submission order.  Windows are assembled into
+        fixed-size waves of ``batch`` so the jitted datapath sees one
+        static shape.  **Final-partial-wave padding semantics**: when the
+        stream ends mid-wave, the wave is padded to ``batch`` by repeating
+        the last real window; the padded rows are computed and DROPPED —
+        exactly one prediction per input window is yielded, never the
+        padding's (pinned by ``tests/test_serving.py``)."""
         # Validate NOW, not at first iteration: serve() itself is a plain
         # function so a bad path/backend or an unquantised session fails at
         # the call site, not deep inside whatever consumes the generator.
-        fn = self._fn(path, backend)
-
-        def waves():
-            buf: list = []
-
-            def flush():
-                n = len(buf)
-                wave = np.stack(buf, axis=0)
-                if n < batch:  # pad the last partial wave to the static shape
-                    pad = np.repeat(wave[-1:], batch - n, axis=0)
-                    wave = np.concatenate([wave, pad], axis=0)
-                y = np.asarray(fn(jnp.asarray(wave)))
-                buf.clear()
-                for i in range(n):
-                    yield y[i]
-
-            for w in stream:
-                buf.append(np.asarray(w))
-                if len(buf) == batch:
-                    yield from flush()
-            if buf:
-                yield from flush()
-
-        return waves()
+        from repro.serving import serve_windows
+        return serve_windows(self, stream, batch=batch, path=path,
+                             backend=backend)
 
     # -- reporting ----------------------------------------------------------
 
@@ -287,6 +315,10 @@ class Accelerator:
             "backend": self.plan["backend"],
             "backends_supported": backends.supported_backends(self.model,
                                                               self.accel),
+            # Engines able to carry (h, c) across windows — the
+            # repro.serving capability surface for this configuration.
+            "stateful_backends": backends.stateful_backends(self.model,
+                                                            self.accel),
             "ops_per_inference": ops,
             "weight_bytes": self.plan["weight_bytes"],
             "quantized": self.qparams is not None,

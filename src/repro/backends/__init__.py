@@ -26,6 +26,16 @@ A backend exposes
   run(qparams, x_int, model, accel) -> y_int      # whole model, batch-major
   layer(x_int, w_x, w_h, b_wide, model, accel)    # one layer, time-major
   supports(model, accel) -> Optional[str]         # None = ok, else reason
+
+and, when it can carry LSTM (h, c) state across calls (the
+``repro.serving`` stateful-streaming contract),
+
+  run_stateful(qparams, x_int, model, accel, state) -> (y_int, new_state)
+
+where ``state`` is ``core.qlstm.IntState`` (per-layer (h, c) int32 codes).
+``ref`` and ``xla`` implement it; the fused ``pallas`` kernel pins
+h0 = c0 = 0, so stateful selection (``select_stateful``) resolves ``auto``
+via the plan's ``stateful_backend`` instead.
 """
 
 from __future__ import annotations
@@ -34,7 +44,7 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.accelerator import (AcceleratorConfig, resolve_backend,
-                                    resolve_model)
+                                    resolve_model, resolve_stateful_backend)
 from repro.core.qlstm import QLSTMConfig
 
 
@@ -49,6 +59,9 @@ class Backend:
     run: Callable                       # (qparams, x_int, model, accel) -> y_int
     supports: Callable                  # (model, accel) -> Optional[str]
     layer: Optional[Callable] = None    # (x_int, wx, wh, b, model, accel) -> h_seq
+    # (qparams, x_int, model, accel, state) -> (y_int, new_state); None when
+    # the engine cannot start from a non-zero (h, c) carry.
+    run_stateful: Optional[Callable] = None
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -95,6 +108,47 @@ def supported_backends(model: QLSTMConfig,
     model = resolve_model(model, accel, warn=False)
     return tuple(n for n in available()
                  if _REGISTRY[n].supports(model, accel) is None)
+
+
+def _stateful_reason(backend: Backend, model: QLSTMConfig,
+                     accel: AcceleratorConfig) -> Optional[str]:
+    reason = backend.supports(model, accel)
+    if reason is not None:
+        return reason
+    if backend.run_stateful is None:
+        return ("no stateful entry point (the engine pins h0 = c0 = 0 and "
+                "cannot carry (h, c) across windows)")
+    return None
+
+
+def select_stateful(model: QLSTMConfig, accel: AcceleratorConfig,
+                    override: Optional[str] = None) -> Backend:
+    """Resolve a backend able to carry (h, c) state across windows.
+
+    Same contract as :func:`select`, but ``auto`` follows the plan's
+    ``stateful_backend`` (the fused pallas kernel pins the carry at zero,
+    so fused configurations resolve to the layered ``ref`` oracle instead —
+    bit-identical by the parity guarantee).  An explicit request for a
+    stateless engine raises :class:`BackendUnsupported`."""
+    model = resolve_model(model, accel, warn=False)
+    name = override if override not in (None, "auto") \
+        else resolve_stateful_backend(model, accel)
+    backend = get(name)
+    reason = _stateful_reason(backend, model, accel)
+    if reason is not None:
+        raise BackendUnsupported(
+            f"backend {name!r} cannot run this configuration statefully: "
+            f"{reason}")
+    return backend
+
+
+def stateful_backends(model: QLSTMConfig,
+                      accel: AcceleratorConfig) -> Tuple[str, ...]:
+    """Names of every engine able to run the configuration with a carried
+    (h, c) state — the ``repro.serving`` capability surface."""
+    model = resolve_model(model, accel, warn=False)
+    return tuple(n for n in available()
+                 if _stateful_reason(_REGISTRY[n], model, accel) is None)
 
 
 # Importing the submodules registers the engines.

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import fixed_point as fxp
 from repro.core.accelerator import AcceleratorConfig
-from repro.core.qlstm import QLSTMConfig
+from repro.core.qlstm import QLSTMConfig, check_int_state
 
 Array = jax.Array
 
@@ -44,3 +44,26 @@ def run_layered(layer_fn: Callable, qparams, x_int: Array,
     h_last = h_t[-1]
     return fxp.fxp_matvec_late_rounding(
         h_last, qparams["dense"]["w"], qparams["dense"]["b"], model.fxp)
+
+
+def run_layered_stateful(layer_fn: Callable, qparams, x_int: Array,
+                         model: QLSTMConfig, accel: AcceleratorConfig,
+                         state):
+    """Stateful counterpart of :func:`run_layered` — threads the per-layer
+    (h, c) carry through ``layer_fn`` and returns it alongside the output.
+
+    ``layer_fn`` here takes the extra ``(h0, c0)`` carry and returns
+    ``(h_seq, (h_last, c_last))``.  ``state`` is the per-layer carry tuple
+    (``core.qlstm.IntState``); returns ``(y_int, new_state)``."""
+    check_int_state(state, qparams)
+    h_t = jnp.swapaxes(x_int, 0, 1).astype(jnp.int32)   # time-major (T, B, M)
+    new_state = []
+    for p, (h0, c0) in zip(qparams["layers"], state):
+        h_t, carry = layer_fn(h_t, p["w_x"], p["w_h"], p["b"], model, accel,
+                              h0, c0)
+        h_t = h_t.astype(jnp.int32)
+        new_state.append(carry)
+    h_last = h_t[-1]
+    y = fxp.fxp_matvec_late_rounding(
+        h_last, qparams["dense"]["w"], qparams["dense"]["b"], model.fxp)
+    return y, tuple(new_state)

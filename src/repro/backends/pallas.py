@@ -52,5 +52,9 @@ def run(qparams, x_int: Array, model: QLSTMConfig,
     return run_layered(layer, qparams, x_int, model, accel)
 
 
+# No run_stateful: the fused kernel initialises h0 = c0 = 0 in VMEM scratch,
+# so it cannot resume a stream mid-sequence.  Stateful serving
+# (repro.serving) resolves to the bit-identical layered ref oracle instead
+# (core.accelerator.resolve_stateful_backend).
 BACKEND = register(Backend(name="pallas", run=run, supports=supports_fused,
                            layer=layer))

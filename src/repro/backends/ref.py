@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 
 from repro.backends import Backend, register
-from repro.backends.common import run_layered, supports_fused
+from repro.backends.common import (run_layered, run_layered_stateful,
+                                   supports_fused)
 from repro.core.accelerator import AcceleratorConfig
 from repro.core.qlstm import QLSTMConfig
 from repro.kernels import ref as _ref
@@ -32,5 +33,25 @@ def run(qparams, x_int: Array, model: QLSTMConfig,
     return run_layered(layer, qparams, x_int, model, accel)
 
 
+def layer_stateful(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+                   model: QLSTMConfig, accel: AcceleratorConfig,
+                   h0: Array, c0: Array):
+    """One layer resumed from a carried (h0, c0): (T, B, M) codes ->
+    ((T, B, H) codes, (h_last, c_last))."""
+    acts = model.acts
+    return _ref.qlstm_seq_ref(
+        x_int, w_x, w_h, b_wide, model.fxp,
+        hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
+        ht_min=acts.ht_min, ht_max=acts.ht_max,
+        h0=h0, c0=c0, return_state=True)
+
+
+def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
+                 accel: AcceleratorConfig, state):
+    """Whole model with cross-window (h, c) carry — (y_int, new_state)."""
+    return run_layered_stateful(layer_stateful, qparams, x_int, model, accel,
+                                state)
+
+
 BACKEND = register(Backend(name="ref", run=run, supports=supports_fused,
-                           layer=layer))
+                           layer=layer, run_stateful=run_stateful))

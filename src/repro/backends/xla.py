@@ -15,7 +15,7 @@ import jax
 
 from repro.backends import Backend, register
 from repro.core.accelerator import AcceleratorConfig
-from repro.core.qlstm import QLSTMConfig, forward_int
+from repro.core.qlstm import QLSTMConfig, forward_int, forward_int_stateful
 
 Array = jax.Array
 
@@ -36,4 +36,11 @@ def run(qparams, x_int: Array, model: QLSTMConfig,
     return forward_int(qparams, x_int, model)
 
 
-BACKEND = register(Backend(name="xla", run=run, supports=supports))
+def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
+                 accel: AcceleratorConfig, state):
+    """Whole model with cross-window (h, c) carry — (y_int, new_state)."""
+    return forward_int_stateful(qparams, x_int, model, state)
+
+
+BACKEND = register(Backend(name="xla", run=run, supports=supports,
+                           run_stateful=run_stateful))

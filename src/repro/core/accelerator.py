@@ -230,6 +230,21 @@ def resolve_backend(model: QLSTMConfig, acc: AcceleratorConfig) -> str:
     return "pallas" if fused_ok else "xla"
 
 
+def resolve_stateful_backend(model: QLSTMConfig,
+                             acc: AcceleratorConfig) -> str:
+    """Backend choice for the cross-window STATEFUL path (`repro.serving`).
+
+    The fused Pallas kernel pins h0 = c0 = 0, so it cannot resume a stream
+    mid-sequence; wherever the stateless resolution lands on ``pallas``
+    (plan-auto or an explicit config choice) the stateful path substitutes
+    the layered ``ref`` oracle — bit-identical by the parity guarantee —
+    so every session keeps a usable stateful engine.  Other explicit
+    choices pass through; `backends.select_stateful` raises if the engine
+    can't carry state."""
+    name = resolve_backend(model, acc)
+    return "ref" if name == "pallas" else name
+
+
 def plan(model: QLSTMConfig, acc: AcceleratorConfig) -> Dict:
     """Resolve every implementation decision for (model, accelerator).
 
@@ -249,6 +264,10 @@ def plan(model: QLSTMConfig, acc: AcceleratorConfig) -> Dict:
         "alu_mode": acc.alu_mode,
         "fxp": acc.fxp,
         "backend": resolve_backend(model, acc),
+        # The engine repro.serving uses for cross-window (h, c) carry — the
+        # fused kernel pins the carry at zero, so this can differ from
+        # "backend" (see resolve_stateful_backend).
+        "stateful_backend": resolve_stateful_backend(model, acc),
         # MXU tiles are 128x128: tiny LSTMs under-fill them, exactly like
         # tiny models under-fill DSP columns.  Report the padding waste.
         "mxu_fill_fraction": _mxu_fill(model) if acc.compute_unit == "mxu" else None,

@@ -306,26 +306,71 @@ def _cell_step_int(p, x_t, h, c, cfg: QLSTMConfig):
     return h_new, c_new
 
 
-def forward_int(qparams: Params, x_int: Array, cfg: QLSTMConfig) -> Array:
-    """Bit-exact accelerator datapath.
+# Per-layer LSTM carry on the integer datapath: a tuple over layers of
+# (h, c) int32 code arrays of shape (batch, hidden_size).  This is the
+# state ``repro.serving`` carries across windows of one client stream.
+IntState = Tuple[Tuple[Array, Array], ...]
 
-    x_int: (batch, seq, input_size) integer codes in cfg.fxp.
-    Returns integer codes (batch, out_features) in cfg.fxp.
-    """
-    b = x_int.shape[0]
+
+def init_int_state(cfg: QLSTMConfig, batch: int) -> IntState:
+    """The reset carry: zero (h, c) int32 codes for every layer — exactly
+    what the accelerator's state registers hold before the first window."""
+    z = lambda: jnp.zeros((batch, cfg.hidden_size), jnp.int32)
+    return tuple((z(), z()) for _ in range(cfg.num_layers))
+
+
+def check_int_state(state: IntState, qparams: Params) -> None:
+    """Reject a carry built for a different layer count — ``zip`` over
+    layers would silently truncate and skip whole layers.  Shared by every
+    stateful entry point (``forward_int_stateful``, the layered backends)."""
+    if len(state) != len(qparams["layers"]):
+        raise ValueError(
+            f"state carries {len(state)} layer(s) but the model has "
+            f"{len(qparams['layers'])}; build it with "
+            f"init_int_state(cfg, batch) for THIS configuration")
+
+
+def forward_int_stateful(qparams: Params, x_int: Array, cfg: QLSTMConfig,
+                         state: IntState) -> Tuple[Array, IntState]:
+    """Bit-exact accelerator datapath with an explicit cross-window carry.
+
+    x_int: (batch, seq, input_size) integer codes in cfg.fxp; ``state`` is
+    the per-layer (h, c) carry from the previous window (``init_int_state``
+    for a fresh stream).  Returns ``(y_int, new_state)`` where y_int is
+    (batch, out_features) codes and ``new_state`` is the carry after the
+    last timestep.  Feeding a long sequence window-by-window through this
+    function is bit-identical to one ``forward_int`` call on the
+    concatenated sequence (the ``repro.serving`` stateful-streaming
+    contract, pinned by ``tests/test_serving.py``)."""
+    check_int_state(state, qparams)
     h_t = x_int.astype(jnp.int32)
-    for p in qparams["layers"]:
-        h0 = jnp.zeros((b, cfg.hidden_size), jnp.int32)
-        c0 = jnp.zeros((b, cfg.hidden_size), jnp.int32)
+    new_state = []
+    h_last = None
+    for p, (h0, c0) in zip(qparams["layers"], state):
 
         def step(carry, x_t, p=p):
             h, c = carry
             h, c = _cell_step_int(p, x_t, h, c, cfg)
             return (h, c), h
 
-        (h_last, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(h_t, 0, 1))
+        (h_last, c_last), hs = jax.lax.scan(
+            step, (h0.astype(jnp.int32), c0.astype(jnp.int32)),
+            jnp.swapaxes(h_t, 0, 1))
+        new_state.append((h_last, c_last))
         h_t = jnp.swapaxes(hs, 0, 1)
-    return _int_mac(h_last, qparams["dense"]["w"], qparams["dense"]["b"], cfg)
+    y = _int_mac(h_last, qparams["dense"]["w"], qparams["dense"]["b"], cfg)
+    return y, tuple(new_state)
+
+
+def forward_int(qparams: Params, x_int: Array, cfg: QLSTMConfig) -> Array:
+    """Bit-exact accelerator datapath.
+
+    x_int: (batch, seq, input_size) integer codes in cfg.fxp.
+    Returns integer codes (batch, out_features) in cfg.fxp.
+    """
+    y, _ = forward_int_stateful(qparams, x_int, cfg,
+                                init_int_state(cfg, x_int.shape[0]))
+    return y
 
 
 # ---------------------------------------------------------------------------

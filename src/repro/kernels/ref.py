@@ -24,13 +24,20 @@ Array = jax.Array
 def qlstm_seq_ref(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
                   cfg: FixedPointConfig,
                   hs_slope_shift: int = 3, hs_bound: float = 3.0,
-                  ht_min: float = -1.0, ht_max: float = 1.0) -> Array:
+                  ht_min: float = -1.0, ht_max: float = 1.0,
+                  h0: Array = None, c0: Array = None,
+                  return_state: bool = False) -> Array:
     """Time-major quantised LSTM sequence — the paper's pipelined datapath.
 
     x_int:  (T, B, M) integer codes in cfg (int8 carrier ok).
     w_x:    (M, 4H) codes; w_h: (H, 4H) codes; gate order [i, f, g, o].
     b_wide: (4H,) codes at the PRODUCT precision (2a frac bits, int32).
-    Returns (T, B, H) int32 codes of every hidden state.
+    h0/c0:  optional (B, H) int32 initial carry (zeros when omitted — the
+            accelerator's reset state); the cross-window carry of
+            ``repro.serving`` stateful streaming.
+    Returns (T, B, H) int32 codes of every hidden state; with
+    ``return_state=True``, ``(hs, (h_last, c_last))`` so the caller can
+    carry the final (h, c) into the next window.
     """
     prod = fxp.product_config(cfg, cfg)
     spec = hard_act.HardSigmoidStarSpec(cfg, hs_slope_shift, hs_bound)
@@ -53,9 +60,14 @@ def qlstm_seq_ref(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
         h_new = fxp.requantize(o * tanh_c, prod, cfg)
         return (h_new, c_new), h_new
 
-    h0 = jnp.zeros((bsz, hdim), jnp.int32)
-    c0 = jnp.zeros((bsz, hdim), jnp.int32)
-    (_, _), hs = jax.lax.scan(step, (h0, c0), x_int.astype(jnp.int32))
+    h0 = jnp.zeros((bsz, hdim), jnp.int32) if h0 is None \
+        else h0.astype(jnp.int32)
+    c0 = jnp.zeros((bsz, hdim), jnp.int32) if c0 is None \
+        else c0.astype(jnp.int32)
+    (h_last, c_last), hs = jax.lax.scan(step, (h0, c0),
+                                        x_int.astype(jnp.int32))
+    if return_state:
+        return hs, (h_last, c_last)
     return hs
 
 

@@ -16,9 +16,11 @@ Two modes share the queue/wave machinery:
   * LM decode (default): ``WaveBatcher(params, cfg, ...)`` — autoregressive
     lockstep decoding as above.
   * LSTM accelerator: ``WaveBatcher.for_accelerator(session, batch_size)``
-    — requests are (T, M) windows; waves run through
-    ``Accelerator.serve`` (the paper's int8 datapath), one static batch
-    shape, results are per-window predictions.
+    — requests are (T, M) windows; waves run through the streaming
+    subsystem (``repro.serving.serve_windows``, the paper's int8
+    datapath), one static batch shape, results are per-window predictions.
+    This mode is a thin compat wrapper: for named streams with
+    cross-window state carry use ``repro.serving.StreamServer`` directly.
 """
 
 from __future__ import annotations
@@ -83,7 +85,8 @@ class WaveBatcher:
 
         Requests are (T, M) float windows submitted with
         ``submit_window``; ``run()`` drains them in fixed-size waves
-        through ``session.serve`` and returns {rid: (P,) prediction}."""
+        through the streaming subsystem (``repro.serving.serve_windows``)
+        and returns {rid: (P,) prediction}."""
         b = cls(None, None, batch_size=batch_size, _lstm_mode=True)
         b.accelerator = session
         b._serve_path = path
@@ -144,7 +147,7 @@ class WaveBatcher:
         """Drain the queue.
 
         LM mode: {rid: generated tokens}.  LSTM-accelerator mode:
-        {rid: (P,) float prediction} via ``Accelerator.serve``."""
+        {rid: (P,) float prediction} via ``repro.serving.serve_windows``."""
         if self.accelerator is not None:
             return self._run_lstm()
         results: Dict[int, List[int]] = {}
@@ -161,12 +164,13 @@ class WaveBatcher:
         return results
 
     def _run_lstm(self) -> Dict[int, np.ndarray]:
+        from repro.serving import serve_windows
         reqs: List[Request] = []
         while self.queue:
             reqs.append(self.queue.popleft())
         stream = (r.prompt for r in reqs)
-        preds = self.accelerator.serve(stream, batch=self.bs,
-                                       path=self._serve_path)
+        preds = serve_windows(self.accelerator, stream, batch=self.bs,
+                              path=self._serve_path)
         results: Dict[int, np.ndarray] = {}
         for r, y in zip(reqs, preds):
             r.output = y

@@ -1,0 +1,34 @@
+"""``repro.serving`` — the stateful streaming serving subsystem.
+
+The paper's deployment story is a single real-time sensor stream (§6:
+32 873 samples/s); this package is the production form of that story —
+many named client streams multiplexed onto one or more ``Accelerator``
+sessions, each stream's LSTM (h, c) carry held across windows, waves
+double-buffered against device compute, tail latency bounded by a
+deadline, and the paper's metrics (samples/s, GOP/s/W, latency
+percentiles) measured where the server actually runs.
+
+Public surface (docs/SERVING.md is the deployment guide):
+
+  * :class:`StreamServer` — submit/poll/flush/close over named streams.
+  * :class:`ServingConfig` — batch, deadline, backpressure, state-store
+    capacity.
+  * :class:`StreamResult` — (stream_id, seq, prediction) rows.
+  * :class:`StateStore` — the bounded LRU carry store (exposed for tests
+    and capacity planning).
+  * :func:`serve_windows` — ordered stateless mapping; the engine behind
+    the ``Accelerator.serve`` / ``WaveBatcher.for_accelerator`` compat
+    wrappers.
+"""
+
+from repro.serving.metrics import MetricsSink, WaveRecord        # noqa: F401
+from repro.serving.scheduler import Wave, WaveScheduler          # noqa: F401
+from repro.serving.server import (ServingConfig, StreamResult,   # noqa: F401
+                                  StreamServer, serve_windows)
+from repro.serving.state import StateStore, StreamState          # noqa: F401
+
+__all__ = [
+    "MetricsSink", "ServingConfig", "StateStore", "StreamResult",
+    "StreamServer", "StreamState", "Wave", "WaveRecord", "WaveScheduler",
+    "serve_windows",
+]

@@ -1,0 +1,124 @@
+"""Serving metrics sink — per-wave records and the percentile summary.
+
+Every computed wave appends one :class:`WaveRecord`; :meth:`MetricsSink.
+summary` reduces them to the numbers the paper reports for its real-time
+deployment (§6): achieved samples/s, per-wave latency percentiles
+(p50/p95/p99), wave occupancy, and how often the deadline forced a partial
+flush.  ``StreamServer.metrics_summary`` extends this with the energy
+model's GOP/s/W *at the measured throughput* (the paper's 11.89 GOP/s/W
+headline is exactly this quantity at 32 873 samples/s).
+
+Latency definitions (the metrics glossary in docs/SERVING.md):
+
+  * ``compute_s``  — device time for the wave (dispatch to results ready).
+  * ``latency_s``  — end-to-end for the wave's OLDEST window: submit ->
+    results ready.  Queueing + assembly + compute; the quantity the
+    deadline bounds, and what p50/p95/p99 are computed over.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveRecord:
+    """One computed wave, as recorded by the scheduler's compute thread."""
+
+    t_done: float           # perf_counter when results were ready
+    compute_s: float        # device compute time for the wave
+    latency_s: float        # oldest-window end-to-end latency
+    occupancy: int          # real (non-padding) windows in the wave
+    batch: int              # static wave size the datapath saw
+    deadline_flush: bool    # True when the deadline forced a partial wave
+
+
+class MetricsSink:
+    """Thread-safe accumulator of :class:`WaveRecord` rows.
+
+    ``note_submit`` timestamps the first submission so achieved samples/s
+    is measured over the full submit -> last-result wall interval.
+
+    The sink is bounded: a long-lived server records one wave forever, so
+    only the most recent ``window`` records are retained for the
+    percentile/mean reductions (latency p50/p95/p99 then read as *current*
+    behaviour, not lifetime history), while counts — waves, samples,
+    deadline flushes, padded slots — and the samples/s wall interval are
+    lifetime totals kept as O(1) counters."""
+
+    def __init__(self, window: int = 4096):
+        """Create an empty sink retaining the last ``window`` wave records;
+        records arrive via :meth:`record_wave`."""
+        self._lock = threading.Lock()
+        self._recent: Deque[WaveRecord] = collections.deque(maxlen=window)
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+        self._n_waves = 0
+        self._n_samples = 0
+        self._n_deadline_flushes = 0
+        self._n_padded_slots = 0
+        self._compute_s_total = 0.0
+
+    def note_submit(self, t: float) -> None:
+        """Record a submission timestamp (keeps the earliest)."""
+        with self._lock:
+            if self._t_first_submit is None or t < self._t_first_submit:
+                self._t_first_submit = t
+
+    def record_wave(self, record: WaveRecord) -> None:
+        """Append one computed wave (rolls the window, bumps the lifetime
+        counters)."""
+        with self._lock:
+            self._recent.append(record)
+            if self._t_last_done is None or record.t_done > self._t_last_done:
+                self._t_last_done = record.t_done
+            self._n_waves += 1
+            self._n_samples += record.occupancy
+            self._n_deadline_flushes += bool(record.deadline_flush)
+            self._n_padded_slots += record.batch - record.occupancy
+            self._compute_s_total += record.compute_s
+
+    @property
+    def waves(self) -> List[WaveRecord]:
+        """A snapshot copy of the retained (most recent ``window``) waves."""
+        with self._lock:
+            return list(self._recent)
+
+    def summary(self) -> Dict:
+        """Reduce the records to the serving report's throughput/latency
+        block (see the module and class docstrings for the latency
+        definitions and the rolling-window vs lifetime split)."""
+        with self._lock:
+            recent = list(self._recent)
+            t0 = self._t_first_submit
+            t_end = self._t_last_done
+            n_waves = self._n_waves
+            n_samples = self._n_samples
+            n_flushes = self._n_deadline_flushes
+            n_padded = self._n_padded_slots
+            compute_total = self._compute_s_total
+        if not recent:
+            return {"waves": 0, "samples": 0, "samples_per_s": 0.0}
+        lat = np.asarray([w.latency_s for w in recent])
+        comp = np.asarray([w.compute_s for w in recent])
+        wall_s = (t_end - t0) if t0 is not None else compute_total
+        p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+        return {
+            "waves": n_waves,
+            "samples": n_samples,
+            "wall_s": float(wall_s),
+            "samples_per_s": n_samples / wall_s if wall_s > 0 else 0.0,
+            "latency_ms": {"p50": float(p50 * 1e3), "p95": float(p95 * 1e3),
+                           "p99": float(p99 * 1e3),
+                           "mean": float(lat.mean() * 1e3)},
+            "compute_ms_mean": float(comp.mean() * 1e3),
+            "mean_occupancy": n_samples / n_waves,
+            "batch": recent[-1].batch,
+            "deadline_flushes": n_flushes,
+            "padded_slots": int(n_padded),
+        }

@@ -1,0 +1,471 @@
+"""``StreamServer`` — many named client streams, one accelerator.
+
+The paper's headline is *real-time* inference (§6: 32 873 samples/s on a
+live sensor stream); the ROADMAP scenario is that stream multiplied by
+"millions of users".  This module is the piece between the two: clients
+``submit`` windows tagged with a stream id, the scheduler groups them into
+fixed-size waves (one static shape for the jitted datapath), and — the part
+the stateless ``Accelerator.serve`` path cannot do — each stream's LSTM
+(h, c) carry survives across its windows, so window *k+1* continues the
+recurrence window *k* left off, bit-exactly equal to running the stream's
+concatenated sequence through the accelerator in one shot.
+
+Deployment shape::
+
+    server = StreamServer(session, batch=64, deadline_s=0.005)
+    server.submit("sensor-17", window)        # (T, M) float, any thread
+    for r in server.poll(timeout=0.1):        # StreamResult(stream_id, seq, y)
+        route(r.stream_id, r.y)
+    server.metrics_summary()                  # samples/s, p50/p95/p99, GOP/s/W
+    server.close()
+
+Multiple sessions (replicas of ONE configuration sharing one set of
+weights, e.g. one per device) may be passed; waves are dispatched
+round-robin across them by the single strictly-ordered compute thread
+(load spreading — not yet parallel execution; the ordering is what keeps
+per-stream carries consistent).  State lives in a bounded LRU
+:class:`~repro.serving.state.StateStore` — an evicted or brand new stream
+starts from the all-zero reset carry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, Hashable, Iterable, Iterator, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.metrics import MetricsSink, WaveRecord
+from repro.serving.scheduler import Wave, WaveScheduler
+from repro.serving.state import StateStore
+
+
+def _params_equal(a, b) -> bool:
+    """True when two param pytrees hold identical weights (replica check —
+    the model is tiny, so exact comparison at construction is cheap)."""
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        x is y or np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Knobs of the streaming subsystem (docs/SERVING.md has the tuning
+    guide).
+
+    ``batch``: static wave size the jitted datapath sees.  ``deadline_s``:
+    flush a padded partial wave once the oldest pending window has waited
+    this long (None = wait for full waves).  ``queue_depth``: assembled
+    waves the compute thread may fall behind by (2 = double buffering).
+    ``max_pending``: submitted-but-unassembled window bound — ``submit``
+    blocks past it (None = 4 * batch); when pending saturates and no full
+    wave can form (one window per stream), a partial wave is flushed
+    rather than deadlocking the blocked submitters.  ``max_results``:
+    computed-but-unpolled result bound — past it the compute thread blocks
+    before emitting, which stalls the whole pipeline back to ``submit``
+    (full backpressure to a stalled consumer).  The default ``None`` is
+    unbounded: required for the submit-everything-then-``drain()`` pattern
+    (``drain`` flushes before polling, so a bound smaller than the
+    outstanding windows would deadlock it); production servers with a
+    concurrent ``poll`` loop should set it.  ``max_streams``: LRU
+    state-store capacity.  ``stateful``: carry (h, c) across a stream's windows
+    (requires ``path="int"``); False gives the stateless
+    ``Accelerator.serve`` semantics.  ``backend``: stateful engine override
+    (``ref`` | ``xla``)."""
+
+    batch: int = 256
+    path: str = "int"
+    backend: Optional[str] = None
+    stateful: bool = True
+    deadline_s: Optional[float] = 0.010
+    queue_depth: int = 2
+    max_pending: Optional[int] = None
+    max_results: Optional[int] = None
+    max_streams: int = 1024
+
+    def __post_init__(self):
+        """Reject contradictory settings at construction time."""
+        if self.stateful and self.path != "int":
+            raise ValueError(
+                f"stateful serving carries integer (h, c) codes, so it "
+                f"requires path='int' (got path={self.path!r}); set "
+                f"stateful=False for the float/qat paths")
+        if self.max_results is not None and self.max_results < 1:
+            raise ValueError(
+                f"max_results must be >= 1, got {self.max_results}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """One prediction: stream it belongs to, its per-stream sequence number
+    (the value ``submit`` returned), and the (P,) float prediction."""
+
+    stream_id: Hashable
+    seq: int
+    y: np.ndarray
+
+
+class StreamServer:
+    """Stateful streaming front-end over one or more ``Accelerator``
+    sessions (see the module docstring for the deployment shape).
+
+    Results are delivered through :meth:`poll` / :meth:`drain` as
+    :class:`StreamResult` rows; padded slots of partial waves are computed
+    and dropped — they are never emitted and never touch the state store."""
+
+    def __init__(self, sessions, config: Optional[ServingConfig] = None,
+                 **overrides):
+        """``sessions``: one ``Accelerator`` or a list of replicas of the
+        same configuration (waves round-robin across them).  ``config`` or
+        keyword overrides (``batch=``, ``deadline_s=``, ...) set the
+        :class:`ServingConfig`."""
+        sessions = list(sessions) if isinstance(sessions, (list, tuple)) \
+            else [sessions]
+        if not sessions:
+            raise ValueError("need at least one Accelerator session")
+        for s in sessions[1:]:
+            if s.model != sessions[0].model:
+                raise ValueError(
+                    "all sessions must be replicas of one configuration; "
+                    f"got models {s.model} != {sessions[0].model}")
+            if not _params_equal(s.params, sessions[0].params):
+                # Same config but different weights would round-robin waves
+                # across bit-incompatible models (and cross-pollinate their
+                # carries through the shared state store).
+                raise ValueError(
+                    "all sessions must be replicas sharing one set of "
+                    "weights; the given sessions' params differ")
+        cfg = config or ServingConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.config = cfg
+        self._sessions = sessions
+        # Compile/validate NOW: a bad path/backend or an unquantised session
+        # fails at construction, not in the compute thread.
+        if cfg.stateful:
+            self._fns = [s.compiled_stateful(cfg.backend) for s in sessions]
+        else:
+            self._fns = [s.compiled(cfg.path, cfg.backend) for s in sessions]
+        self.states = StateStore(cfg.max_streams) if cfg.stateful else None
+        self.metrics = MetricsSink()
+        self._results: "queue.Queue" = queue.Queue(
+            maxsize=cfg.max_results or 0)
+        self._seq: Dict[Hashable, int] = {}
+        # stream_id -> submission watermark of an end_stream request:
+        # carries of windows submitted before it are not re-stored.  Every
+        # tombstone is pruned once the stream has no windows in flight
+        # (tracked in _outstanding), so neither dict can grow beyond the
+        # streams currently inside the pipeline.
+        self._ended: Dict[Hashable, int] = {}
+        self._outstanding: Dict[Hashable, int] = {}
+        self._seq_lock = threading.Lock()
+        self._window_shape = None
+        self._rr = 0
+        self._sched = WaveScheduler(
+            cfg.batch, self._execute, one_per_stream=cfg.stateful,
+            deadline_s=cfg.deadline_s, queue_depth=cfg.queue_depth,
+            max_pending=cfg.max_pending)
+
+    # -- client surface -----------------------------------------------------
+
+    def submit(self, stream_id: Hashable,
+               window: Union[np.ndarray, "jnp.ndarray"]) -> int:
+        """Enqueue one (T, M) float window for ``stream_id``; returns the
+        window's per-stream sequence number.  Blocks under backpressure
+        (``max_pending``).  All windows of a server must share one shape
+        (the jitted datapath is compiled for it)."""
+        w = np.asarray(window, np.float32)
+        with self._seq_lock:
+            if self._window_shape is None:
+                self._window_shape = w.shape
+            elif w.shape != self._window_shape:
+                raise ValueError(f"window shape {w.shape} != first window's "
+                                 f"{self._window_shape}; one server serves "
+                                 f"one static shape")
+
+        def alloc_seq() -> int:
+            # Runs inside the scheduler's critical section, so the seq a
+            # thread gets and its position in the FIFO cannot be reordered
+            # against another thread submitting to the same stream.
+            with self._seq_lock:
+                seq = self._seq.get(stream_id, 0)
+                self._seq[stream_id] = seq + 1
+                if self.config.stateful:
+                    self._outstanding[stream_id] = \
+                        self._outstanding.get(stream_id, 0) + 1
+                return seq
+
+        self.metrics.note_submit(time.perf_counter())
+        return self._sched.submit(stream_id, w, alloc_seq)
+
+    def poll(self, timeout: float = 0.0) -> List[StreamResult]:
+        """Completed predictions, in wave order (per-stream order is always
+        submission order).  Returns immediately with whatever is ready;
+        with ``timeout`` > 0, waits up to that long for the first result.
+        Re-raises a compute-thread failure."""
+        out: List[StreamResult] = []
+        end = time.perf_counter() + timeout
+        while True:
+            try:
+                while True:
+                    out.append(self._results.get_nowait())
+            except queue.Empty:
+                pass
+            if out:
+                return out
+            err = self._sched.error
+            if err is not None:
+                raise err
+            remaining = end - time.perf_counter()
+            if remaining <= 0:
+                return out
+            try:
+                out.append(self._results.get(timeout=min(remaining, 0.25)))
+            except queue.Empty:
+                pass
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Barrier: force partial waves and wait until every window
+        submitted before the call has been computed."""
+        self._sched.flush(timeout=timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> List[StreamResult]:
+        """``flush`` then collect everything: all outstanding predictions."""
+        self.flush(timeout=timeout)
+        return self.poll()
+
+    def end_stream(self, stream_id: Hashable) -> None:
+        """Forget a stream (explicit end-of-stream): its carry on stateful
+        servers, and its sequence numbering on every server — the next
+        window under the same id starts a fresh stream, from the reset
+        state and with its sequence numbering restarted at 0.  On
+        stateless servers this is also the only way to prune a retired
+        id's ``_seq`` entry, so long-lived deployments with rotating
+        client ids should call it.
+
+        Safe against in-flight windows: carries of windows submitted
+        before this call are never re-stored (a tombstone watermark makes
+        the compute thread skip their scatter), so a window submitted
+        AFTER the call is guaranteed the zero reset carry."""
+        if self.states is None:
+            with self._seq_lock:
+                self._seq.pop(stream_id, None)
+            return
+        watermark = self._sched.submission_watermark()
+        with self._seq_lock:
+            self._seq.pop(stream_id, None)
+            # A tombstone is only needed while windows are in flight; it is
+            # pruned by _retire once the last of them clears the pipeline.
+            if self._outstanding.get(stream_id, 0) > 0:
+                self._ended[stream_id] = max(watermark,
+                                             self._ended.get(stream_id, 0))
+            # Inside the lock: _scatter holds it across its tombstone check
+            # AND its states.put, so the pop here cannot interleave with a
+            # put and erase a reborn stream's carry (or miss a stale one).
+            self.states.pop(stream_id)
+
+    def close(self, abandon: bool = False) -> None:
+        """Stop the server.  Default: drain submitted windows first;
+        ``abandon=True`` discards pending work immediately.  A drain that
+        cannot complete (a ``max_results``-bounded queue wedged by a
+        consumer that stopped polling) escalates to abandon after a
+        timeout instead of leaking the worker threads."""
+        self._sched.close(abandon=abandon)
+
+    def __enter__(self) -> "StreamServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(abandon=exc_type is not None)
+
+    # -- metrics ------------------------------------------------------------
+
+    def reset_metrics(self) -> None:
+        """Start a fresh metrics window (e.g. after a warm-up wave, so the
+        compile time stays out of the measured interval)."""
+        self.metrics = MetricsSink()
+
+    def metrics_summary(self) -> Dict:
+        """The serving report: achieved samples/s, per-wave latency
+        p50/p95/p99, occupancy, deadline flushes, state-store counters, and
+        the energy model's GOP/s/W at the MEASURED operating point (mean
+        wave compute latency, mean occupancy) — the paper's Table-4 metric
+        evaluated where the server actually runs."""
+        s = self.metrics.summary()
+        s["stateful"] = self.config.stateful
+        s["sessions"] = len(self._sessions)
+        s["state"] = self.states.stats() if self.states is not None else None
+        if s["waves"]:
+            sess = self._sessions[0]
+            occupancy = max(1, round(s["mean_occupancy"]))
+            rep = sess.report(latency_s=s["compute_ms_mean"] / 1e3,
+                              batch=occupancy)
+            s["ops_per_inference"] = rep["ops_per_inference"]
+            s["energy"] = rep["energy"]
+            s["gops_per_watt"] = rep["energy"]["gops_per_watt"]
+        return s
+
+    # -- compute thread -----------------------------------------------------
+
+    def _execute(self, wave: Wave) -> None:
+        """Gather carries -> device datapath -> scatter carries -> emit.
+        Runs on the scheduler's compute thread, waves strictly in order —
+        which is what makes the gather/scatter of consecutive windows of
+        one stream consistent."""
+        fn = self._fns[self._rr % len(self._fns)]
+        self._rr += 1
+        t0 = time.perf_counter()
+        x = jnp.asarray(wave.x)
+        if self.config.stateful:
+            y, new_state = fn(x, self._gather(wave))
+            y = np.asarray(y)
+            evicted = self._scatter(wave, new_state)
+            self._retire(wave)
+            self._reconcile_evictions(evicted)
+        else:
+            y = np.asarray(fn(x))
+        t1 = time.perf_counter()
+        self.metrics.record_wave(WaveRecord(
+            t_done=t1, compute_s=t1 - t0, latency_s=t1 - wave.t_oldest,
+            occupancy=wave.occupancy, batch=self.config.batch,
+            deadline_flush=wave.deadline_flush))
+        for i, slot in enumerate(wave.slots):
+            r = StreamResult(slot.stream_id, slot.seq, y[i])
+            # With max_results set this blocks, stalling the compute thread
+            # and — through the wave queue and pending bounds — eventually
+            # submit(): full backpressure to a stalled consumer.  Give up
+            # on abandon so close(abandon=True) cannot hang on a full
+            # results queue.
+            while True:
+                try:
+                    self._results.put(r, timeout=0.1)
+                    break
+                except queue.Full:
+                    if self._sched.stopped:
+                        return
+
+    def _gather(self, wave: Wave):
+        """Per-layer (h, c) batch arrays for the wave: stored carries for
+        known streams, the zero reset state for new/evicted streams and
+        padding rows."""
+        model = self._sessions[0].model
+        nl, hidden = model.num_layers, model.hidden_size
+        hs = [np.zeros((self.config.batch, hidden), np.int32)
+              for _ in range(nl)]
+        cs = [np.zeros((self.config.batch, hidden), np.int32)
+              for _ in range(nl)]
+        for i, slot in enumerate(wave.slots):
+            st = self.states.get(slot.stream_id)
+            if st is not None:
+                for li, (h, c) in enumerate(st):
+                    hs[li][i] = h
+                    cs[li][i] = c
+        return tuple((jnp.asarray(hs[li]), jnp.asarray(cs[li]))
+                     for li in range(nl))
+
+    def _scatter(self, wave: Wave, new_state) -> set:
+        """Store each real slot's updated carry; returns the ids evicted by
+        the wave's puts (reconciled by :meth:`_reconcile_evictions` after
+        :meth:`_retire`).  Padding rows are dropped (they never touch the
+        store); so are carries tombstoned by ``end_stream`` — windows
+        submitted before the end must not resurrect the stream's state."""
+        rows = [(np.asarray(h), np.asarray(c)) for h, c in new_state]
+        evicted_all = set()
+        for i, slot in enumerate(wave.slots):
+            sid = slot.stream_id
+            # One lock section spans the tombstone check AND the put: an
+            # end_stream between them could otherwise be silently undone
+            # by the put, resurrecting the ended stream's carry.  The
+            # store's own lock never takes _seq_lock, so no cycle.
+            with self._seq_lock:
+                watermark = self._ended.get(sid)
+                if watermark is not None:
+                    if slot.sub_idx < watermark:
+                        continue       # ended-generation carry: drop it
+                    del self._ended[sid]   # stream reborn after the end
+                # copy(): a view of row i would pin the whole
+                # (batch, hidden) wave array in the store for the stream's
+                # lifetime.
+                evicted_all.update(
+                    self.states.put(sid, [(h[i].copy(), c[i].copy())
+                                          for h, c in rows]))
+        return evicted_all
+
+    def _reconcile_evictions(self, evicted: set) -> None:
+        """An evicted stream is forgotten ENTIRELY — carry and sequence
+        numbering — so a returning client looks like a new stream (and a
+        stateful server's _seq cannot grow without bound; state.py's
+        docstring scenario is millions of users).  Runs after
+        :meth:`_retire`, and only prunes a victim that is really gone:
+
+        * a victim that was a LATER slot of the evicting wave re-stored
+          its (correctly continued) carry — never really evicted, keeps
+          its numbering;
+        * a victim with windows still in flight keeps its numbering too —
+          its pending window's scatter will re-store its carry before any
+          later wave gathers it (waves compute strictly in order), so
+          pruning here would hand out duplicate (stream_id, seq) keys."""
+        with self._seq_lock:
+            for vid in evicted:
+                if vid not in self.states \
+                        and self._outstanding.get(vid, 0) == 0:
+                    self._seq.pop(vid, None)
+
+    def _retire(self, wave: Wave) -> None:
+        """Per-stream in-flight accounting: once a stream has no windows
+        left in the pipeline, its end_stream tombstone (if any) can never
+        match again and is pruned — this bounds ``_ended``/``_outstanding``
+        by the streams currently inside the pipeline."""
+        with self._seq_lock:
+            for slot in wave.slots:
+                sid = slot.stream_id
+                left = self._outstanding.get(sid, 1) - 1
+                if left > 0:
+                    self._outstanding[sid] = left
+                else:
+                    self._outstanding.pop(sid, None)
+                    self._ended.pop(sid, None)
+
+
+def serve_windows(session, stream: Iterable, batch: int = 256,
+                  path: str = "int",
+                  backend: Optional[str] = None) -> Iterator[np.ndarray]:
+    """Ordered stateless mapping of a window iterator — the
+    ``Accelerator.serve`` semantics, executed by the streaming subsystem.
+
+    Windows of shape (T, M) are assembled into fixed-size waves of
+    ``batch``; predictions of shape (P,) are yielded in submission order.
+    The final partial wave is PADDED to the static shape by repeating the
+    last window; padded outputs are computed and dropped — exactly
+    ``len(list(stream))`` predictions are yielded, never more.  Unlike the
+    legacy synchronous path, wave *N+1* is assembled while wave *N*
+    computes (the scheduler's double buffering), and a slow consumer
+    exerts backpressure instead of unbounded buffering."""
+    config = ServingConfig(batch=batch, path=path, backend=backend,
+                           stateful=False, deadline_s=None)
+    # Validate NOW (cached on the session): a bad path/backend or an
+    # unquantised session fails at the call site, not at first iteration.
+    # The server itself — two live threads — is only constructed once the
+    # generator is actually consumed, so an abandoned call leaks nothing.
+    session.compiled(path, backend)
+
+    def _gen():
+        server = StreamServer(session, config)
+        try:
+            for w in stream:
+                server.submit(None, w)
+                for r in server.poll():
+                    yield r.y
+            for r in server.drain():
+                yield r.y
+        finally:
+            server.close(abandon=True)
+
+    return _gen()
