@@ -1,22 +1,29 @@
 """Streaming-serving benchmark — achieved samples/s vs the paper's §6
 headline (32 873 samples/s at 11.89 GOP/s/W on the XC7S15).
 
-  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [out.json]
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+      [--stateful-backend ref,xla,pallas] [out.json]
 
 Two scenarios through `repro.serving`:
 
   * ``stateless`` — the ``Accelerator.serve`` wave path (the paper's
     single-stream real-time deployment, batched).
-  * ``stateful``  — many named client streams multiplexed through
-    ``StreamServer`` with cross-window (h, c) carry (the ROADMAP's
-    many-user scenario; one window per stream per wave).
+  * ``stateful[<backend>]`` — many named client streams multiplexed
+    through ``StreamServer`` with cross-window (h, c) carry (the
+    ROADMAP's many-user scenario; one window per stream per wave), once
+    per requested stateful engine, so the artifact records per-backend
+    samples/s and GOP/s/W.  ``--stateful-backend`` takes a comma list of
+    ``ref`` | ``xla`` | ``pallas``; the default is the plan's
+    ``stateful_backend`` (the fused pallas kernel — off-TPU it runs
+    interpret mode, so CI's ``--smoke`` measures the pallas-interpret
+    point and the numbers track the trajectory, not the FPGA's).
 
 Writes ``BENCH_serving.json``: per-scenario achieved samples/s, per-wave
 latency p50/p95/p99, GOP/s/W at the measured operating point, and the
 paper reference numbers.  Render with
 ``python -m repro.analysis.report --serving BENCH_serving.json``.
 CI runs ``--smoke`` (small waves, CPU interpret mode) and uploads the
-artifact — the numbers track the perf trajectory, not the FPGA's.
+artifact.
 """
 
 import json
@@ -25,7 +32,11 @@ import sys
 PAPER_SAMPLES_PER_S = 32873.0     # §6, XC7S15 @ 204 MHz
 PAPER_GOPS_PER_WATT = 11.89       # Table 4
 
-SCHEMA_VERSION = 1
+# 2: stateful scenarios keyed "stateful[<backend>]" with a "backend" field
+# (was one "stateful" key with the implicit plan engine).
+SCHEMA_VERSION = 2
+
+STATEFUL_BACKENDS = ("ref", "xla", "pallas")
 
 
 def _scenario_stateless(sess, n_windows, batch):
@@ -49,15 +60,17 @@ def _scenario_stateless(sess, n_windows, batch):
         return srv.metrics_summary()
 
 
-def _scenario_stateful(sess, n_streams, windows_per_stream, batch):
-    """Multiplexed named streams with cross-window carry."""
+def _scenario_stateful(sess, n_streams, windows_per_stream, batch,
+                       backend=None):
+    """Multiplexed named streams with cross-window carry on ``backend``
+    (None = the plan's ``stateful_backend``)."""
     import numpy as np
     rng = np.random.default_rng(1)
     model = sess.model
     xs = rng.uniform(0, 1, (n_streams, windows_per_stream, model.seq_len,
                             model.input_size)).astype(np.float32)
     from repro.serving import StreamServer
-    with StreamServer(sess, batch=batch, deadline_s=0.05,
+    with StreamServer(sess, batch=batch, deadline_s=0.05, backend=backend,
                       max_streams=max(16, n_streams)) as srv:
         srv.submit("warmup", xs[0, 0])      # compile outside the clock
         srv.drain()
@@ -67,7 +80,9 @@ def _scenario_stateful(sess, n_streams, windows_per_stream, batch):
             for s in range(n_streams):
                 srv.submit(f"s{s}", xs[s, w])
         srv.drain()
-        return srv.metrics_summary()
+        summary = srv.metrics_summary()
+    summary["backend"] = backend or sess.plan["stateful_backend"]
+    return summary
 
 
 def _row(name, summary):
@@ -75,20 +90,34 @@ def _row(name, summary):
             round(summary["samples_per_s"], 1))
 
 
-def run(smoke: bool = False, out_path: str = "BENCH_serving.json"):
-    """Measure both scenarios and write the JSON payload; returns the
-    CSV-ish rows the benchmark harness prints."""
+def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
+        stateful_backends=None):
+    """Measure the stateless scenario plus one stateful scenario per
+    requested engine; write the JSON payload and return the CSV-ish rows
+    the benchmark harness prints."""
     import repro
     sess = repro.build().quantize()     # the paper's default configuration
+    backends = tuple(stateful_backends) if stateful_backends \
+        else (sess.plan["stateful_backend"],)
+    for b in backends:
+        if b not in STATEFUL_BACKENDS:
+            raise SystemExit(f"unknown stateful backend {b!r}; "
+                             f"choose from {STATEFUL_BACKENDS}")
 
+    scenarios = {}
     if smoke:
-        stateless = _scenario_stateless(sess, n_windows=64, batch=16)
-        stateful = _scenario_stateful(sess, n_streams=8,
-                                      windows_per_stream=4, batch=8)
+        scenarios["stateless"] = _scenario_stateless(sess, n_windows=64,
+                                                     batch=16)
+        for b in backends:
+            scenarios[f"stateful[{b}]"] = _scenario_stateful(
+                sess, n_streams=8, windows_per_stream=4, batch=8, backend=b)
     else:
-        stateless = _scenario_stateless(sess, n_windows=4096, batch=256)
-        stateful = _scenario_stateful(sess, n_streams=128,
-                                      windows_per_stream=16, batch=64)
+        scenarios["stateless"] = _scenario_stateless(sess, n_windows=4096,
+                                                     batch=256)
+        for b in backends:
+            scenarios[f"stateful[{b}]"] = _scenario_stateful(
+                sess, n_streams=128, windows_per_stream=16, batch=64,
+                backend=b)
 
     payload = {
         "suite": "serving",
@@ -96,7 +125,7 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json"):
         "smoke": smoke,
         "paper": {"samples_per_s": PAPER_SAMPLES_PER_S,
                   "gops_per_watt": PAPER_GOPS_PER_WATT},
-        "scenarios": {"stateless": stateless, "stateful": stateful},
+        "scenarios": scenarios,
     }
     for s in payload["scenarios"].values():
         s["vs_paper_samples_per_s"] = s["samples_per_s"] / PAPER_SAMPLES_PER_S
@@ -107,11 +136,25 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json"):
 
 
 def main(argv):
-    """CLI: ``[--smoke] [out.json]``."""
+    """CLI: ``[--smoke] [--stateful-backend ref,xla,pallas] [out.json]``."""
     smoke = "--smoke" in argv
-    paths = [a for a in argv if not a.startswith("--")]
+    stateful_backends = None
+    paths = []
+    it = iter(a for a in argv if a != "--smoke")
+    for a in it:
+        if a == "--stateful-backend" or a.startswith("--stateful-backend="):
+            val = a.split("=", 1)[1] if "=" in a else next(it, "")
+            stateful_backends = [b for b in val.split(",") if b]
+            if not stateful_backends:
+                raise SystemExit(
+                    "--stateful-backend needs a comma list of "
+                    f"{','.join(STATEFUL_BACKENDS)}")
+        elif a.startswith("--"):
+            raise SystemExit(f"unknown flag {a!r}")
+        else:
+            paths.append(a)
     rows = run(smoke=smoke, out_path=paths[0] if paths
-               else "BENCH_serving.json")
+               else "BENCH_serving.json", stateful_backends=stateful_backends)
     print("name,us_per_call,derived")
     for n, us, d in rows:
         print(f"{n},{us:.2f},{d}")

@@ -18,7 +18,7 @@ point (docs/API.md §Design-space exploration)::
 """
 from repro.api import Accelerator, build  # noqa: F401
 
-__version__ = "0.3.1"
+__version__ = "0.3.2"
 
 
 def __getattr__(name):

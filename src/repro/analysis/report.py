@@ -148,14 +148,16 @@ def serving_table(payload: Dict) -> str:
     out = [f"Paper reference (XC7S15 @ 204 MHz): "
            f"{paper['samples_per_s']:,.0f} samples/s, "
            f"{paper['gops_per_watt']:.2f} GOP/s/W.", "",
-           "| scenario | samples/s | vs paper | p50 ms | p95 ms | p99 ms | "
-           "waves | occupancy | deadline flushes | evictions | GOP/s/W |",
-           "|---|---|---|---|---|---|---|---|---|---|---|"]
+           "| scenario | backend | samples/s | vs paper | p50 ms | p95 ms | "
+           "p99 ms | waves | occupancy | deadline flushes | evictions | "
+           "GOP/s/W |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for name, s in payload["scenarios"].items():
         lat = s["latency_ms"]
         ev = (s.get("state") or {}).get("evictions", "—")
         out.append(
-            f"| {name} | {s['samples_per_s']:,.0f} | "
+            f"| {name} | {s.get('backend', '—')} | "
+            f"{s['samples_per_s']:,.0f} | "
             f"{s['vs_paper_samples_per_s']:.2f}x | {lat['p50']:.2f} | "
             f"{lat['p95']:.2f} | {lat['p99']:.2f} | {s['waves']} | "
             f"{s['mean_occupancy']:.1f}/{s['batch']} | "

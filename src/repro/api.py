@@ -203,10 +203,12 @@ class Accelerator:
         ``state`` is the per-layer (h, c) carry (``init_state`` for a fresh
         stream).  This is the datapath behind ``repro.serving`` — feeding a
         stream window-by-window with the carried state is bit-identical to
-        one call on the concatenated sequence.  ``backend`` must be
-        stateful-capable (``ref`` | ``xla``; the fused pallas kernel pins
-        the carry at zero, so ``auto`` follows the plan's
-        ``stateful_backend``)."""
+        one call on the concatenated sequence.  Every engine is
+        stateful-capable (``ref`` | ``pallas`` | ``xla``): the fused
+        pallas kernel seeds its (h, c) VMEM scratch from the carry, so
+        ``auto`` (the plan's ``stateful_backend``) resolves exactly like
+        the stateless path — docs/API.md §Backends has the selection
+        order."""
         self._require_quantized()
         bk = backends.select_stateful(self.model, self.accel,
                                       override=backend)

@@ -33,9 +33,11 @@ and, when it can carry LSTM (h, c) state across calls (the
   run_stateful(qparams, x_int, model, accel, state) -> (y_int, new_state)
 
 where ``state`` is ``core.qlstm.IntState`` (per-layer (h, c) int32 codes).
-``ref`` and ``xla`` implement it; the fused ``pallas`` kernel pins
-h0 = c0 = 0, so stateful selection (``select_stateful``) resolves ``auto``
-via the plan's ``stateful_backend`` instead.
+All three engines implement it — the fused ``pallas`` kernel seeds its
+(h, c) VMEM scratch from the carried state and returns the final state —
+so stateful selection (``select_stateful``, following the plan's
+``stateful_backend``) resolves exactly like the stateless path
+(docs/API.md §Backends documents the selection order).
 """
 
 from __future__ import annotations
@@ -55,6 +57,9 @@ class BackendUnsupported(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
+    """One registered execution engine: the callables the dispatch layer
+    (``select`` / ``select_stateful``) hands to ``Accelerator``."""
+
     name: str
     run: Callable                       # (qparams, x_int, model, accel) -> y_int
     supports: Callable                  # (model, accel) -> Optional[str]
@@ -68,11 +73,15 @@ _REGISTRY: Dict[str, Backend] = {}
 
 
 def register(backend: Backend) -> Backend:
+    """Add an engine to the registry (last registration under a name wins)
+    and return it, so modules can ``BACKEND = register(Backend(...))``."""
     _REGISTRY[backend.name] = backend
     return backend
 
 
 def get(name: str) -> Backend:
+    """The registered engine under ``name``; KeyError names the known
+    engines when it does not exist."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -81,6 +90,7 @@ def get(name: str) -> Backend:
 
 
 def available() -> Tuple[str, ...]:
+    """Names of every registered engine, sorted."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -116,8 +126,8 @@ def _stateful_reason(backend: Backend, model: QLSTMConfig,
     if reason is not None:
         return reason
     if backend.run_stateful is None:
-        return ("no stateful entry point (the engine pins h0 = c0 = 0 and "
-                "cannot carry (h, c) across windows)")
+        return ("no stateful entry point (the engine cannot carry (h, c) "
+                "across windows)")
     return None
 
 
@@ -126,10 +136,10 @@ def select_stateful(model: QLSTMConfig, accel: AcceleratorConfig,
     """Resolve a backend able to carry (h, c) state across windows.
 
     Same contract as :func:`select`, but ``auto`` follows the plan's
-    ``stateful_backend`` (the fused pallas kernel pins the carry at zero,
-    so fused configurations resolve to the layered ``ref`` oracle instead —
-    bit-identical by the parity guarantee).  An explicit request for a
-    stateless engine raises :class:`BackendUnsupported`."""
+    ``stateful_backend`` — currently identical to the stateless choice,
+    since every engine (including the fused pallas kernel) implements
+    ``run_stateful``.  An explicit request for an engine without a
+    stateful entry point raises :class:`BackendUnsupported`."""
     model = resolve_model(model, accel, warn=False)
     name = override if override not in (None, "auto") \
         else resolve_stateful_backend(model, accel)

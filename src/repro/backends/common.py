@@ -32,6 +32,15 @@ def supports_fused(model: QLSTMConfig,
     return None
 
 
+def dense_head(h_last: Array, qparams, model: QLSTMConfig) -> Array:
+    """The shared dense head: final-step (B, H) hidden codes -> (B, P)
+    output codes, with the single late rounding (S5).  Every layered
+    engine — and the fused multi-layer pallas datapath — ends here, so the
+    head cannot drift between them."""
+    return fxp.fxp_matvec_late_rounding(
+        h_last, qparams["dense"]["w"], qparams["dense"]["b"], model.fxp)
+
+
 def run_layered(layer_fn: Callable, qparams, x_int: Array,
                 model: QLSTMConfig, accel: AcceleratorConfig) -> Array:
     """Stack ``layer_fn`` over ``model.num_layers`` and apply the dense head.
@@ -41,9 +50,7 @@ def run_layered(layer_fn: Callable, qparams, x_int: Array,
     for p in qparams["layers"]:
         h_t = layer_fn(h_t, p["w_x"], p["w_h"], p["b"], model, accel)
         h_t = h_t.astype(jnp.int32)
-    h_last = h_t[-1]
-    return fxp.fxp_matvec_late_rounding(
-        h_last, qparams["dense"]["w"], qparams["dense"]["b"], model.fxp)
+    return dense_head(h_t[-1], qparams, model)
 
 
 def run_layered_stateful(layer_fn: Callable, qparams, x_int: Array,
@@ -63,7 +70,4 @@ def run_layered_stateful(layer_fn: Callable, qparams, x_int: Array,
                               h0, c0)
         h_t = h_t.astype(jnp.int32)
         new_state.append(carry)
-    h_last = h_t[-1]
-    y = fxp.fxp_matvec_late_rounding(
-        h_last, qparams["dense"]["w"], qparams["dense"]["b"], model.fxp)
-    return y, tuple(new_state)
+    return dense_head(h_t[-1], qparams, model), tuple(new_state)

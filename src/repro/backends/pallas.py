@@ -5,6 +5,14 @@ double-buffered against MXU/VPU compute, int32 accumulator with the single
 S5 rounding.  Runs ``interpret=True`` off-TPU (bit-exact execution of the
 kernel body — the validation mode for CPU containers) and compiled on TPU.
 
+The engine is fully STATEFUL: the kernel seeds its per-layer (h, c) VMEM
+scratch from the carried state at t == 0 and returns the final state, so
+``run_stateful`` serves the ``repro.serving`` cross-window streaming
+contract directly — and the whole-model paths (``run`` and
+``run_stateful``) execute the entire LSTM stack in ONE fused
+``qlstm_seq_multilayer_pallas`` call, streaming layer-to-layer in VMEM
+instead of re-launching the kernel per layer from Python.
+
 The ``1to1`` HardSigmoid* method is a full-LUT gather — the MXU/VPU kernel
 lowers it to the bit-identical ``arithmetic`` form instead (the three
 methods agree by construction; `core/hard_act.py`)."""
@@ -15,10 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.backends import Backend, register
-from repro.backends.common import run_layered, supports_fused
+from repro.backends.common import dense_head, supports_fused
 from repro.core.accelerator import AcceleratorConfig, sync_accelerator
-from repro.core.qlstm import QLSTMConfig
-from repro.kernels.qlstm_cell import qlstm_seq_pallas
+from repro.core.qlstm import QLSTMConfig, check_int_state, init_int_state
+from repro.kernels.qlstm_cell import (qlstm_seq_multilayer_pallas,
+                                      qlstm_seq_pallas)
 
 Array = jax.Array
 
@@ -27,34 +36,58 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def layer(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
-          model: QLSTMConfig, accel: AcceleratorConfig) -> Array:
-    """One fused LSTM layer, time-major: (T, B, M) codes -> (T, B, H)."""
+def _kernel_args(model: QLSTMConfig, accel: AcceleratorConfig) -> dict:
+    """The static kernel configuration shared by every entry point (with
+    the 1to1 -> arithmetic HardSigmoid* lowering applied)."""
     acts = model.acts
     acc = sync_accelerator(model, accel)
     hs_method = "arithmetic" if acc.hs_method == "1to1" else acc.hs_method
+    return dict(cfg=model.fxp, hs_method=hs_method,
+                hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
+                ht_min=acts.ht_min, ht_max=acts.ht_max,
+                compute_unit=acc.compute_unit, interpret=_interpret())
+
+
+def layer(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+          model: QLSTMConfig, accel: AcceleratorConfig) -> Array:
+    """One fused LSTM layer, time-major: (T, B, M) codes -> (T, B, H)."""
+    sd = model.fxp.storage_dtype
     out = qlstm_seq_pallas(
-        x_int.astype(model.fxp.storage_dtype),
-        w_x.astype(model.fxp.storage_dtype),
-        w_h.astype(model.fxp.storage_dtype),
-        b_wide,
-        cfg=model.fxp,
-        hs_method=hs_method,
-        hs_slope_shift=acts.hs_slope_shift, hs_bound=acts.hs_bound,
-        ht_min=acts.ht_min, ht_max=acts.ht_max,
-        compute_unit=acc.compute_unit,
-        interpret=_interpret())
+        x_int.astype(sd), w_x.astype(sd), w_h.astype(sd), b_wide,
+        **_kernel_args(model, accel))
     return out.astype(jnp.int32)
+
+
+def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
+                 accel: AcceleratorConfig, state):
+    """Whole model with cross-window (h, c) carry — (y_int, new_state).
+
+    The entire stack runs in ONE fused kernel launch: every layer's (h, c)
+    stays resident in VMEM and layer *l*'s step-t output feeds layer *l+1*
+    at the same step, with no per-layer HBM round-trip."""
+    check_int_state(state, qparams)
+    sd = model.fxp.storage_dtype
+    h_t = jnp.swapaxes(x_int, 0, 1).astype(sd)          # time-major (T, B, M)
+    layers = qparams["layers"]
+    out, new_state = qlstm_seq_multilayer_pallas(
+        h_t,
+        tuple(p["w_x"].astype(sd) for p in layers),
+        tuple(p["w_h"].astype(sd) for p in layers),
+        tuple(p["b"] for p in layers),
+        tuple(h for h, _ in state),
+        tuple(c for _, c in state),
+        **_kernel_args(model, accel))
+    return dense_head(out[-1].astype(jnp.int32), qparams, model), new_state
 
 
 def run(qparams, x_int: Array, model: QLSTMConfig,
         accel: AcceleratorConfig) -> Array:
-    return run_layered(layer, qparams, x_int, model, accel)
+    """Whole model, batch-major — the fused multi-layer kernel started
+    from the zero reset carry."""
+    y, _ = run_stateful(qparams, x_int, model, accel,
+                        init_int_state(model, x_int.shape[0]))
+    return y
 
 
-# No run_stateful: the fused kernel initialises h0 = c0 = 0 in VMEM scratch,
-# so it cannot resume a stream mid-sequence.  Stateful serving
-# (repro.serving) resolves to the bit-identical layered ref oracle instead
-# (core.accelerator.resolve_stateful_backend).
 BACKEND = register(Backend(name="pallas", run=run, supports=supports_fused,
-                           layer=layer))
+                           layer=layer, run_stateful=run_stateful))

@@ -30,6 +30,7 @@ def layer(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
 
 def run(qparams, x_int: Array, model: QLSTMConfig,
         accel: AcceleratorConfig) -> Array:
+    """Whole model, batch-major: (B, T, M) codes -> (B, P) codes."""
     return run_layered(layer, qparams, x_int, model, accel)
 
 

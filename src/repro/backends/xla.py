@@ -24,6 +24,8 @@ _CELLS = ("hard_tanh", "lut_tanh", "tanh")
 
 
 def supports(model: QLSTMConfig, accel: AcceleratorConfig) -> Optional[str]:
+    """None when the configuration has an integer datapath here (every
+    Table-2 point does), else the reason it cannot run."""
     if model.acts.gate not in _GATES:
         return f"gate activation {model.acts.gate!r} has no integer datapath"
     if model.acts.cell not in _CELLS:
@@ -33,6 +35,7 @@ def supports(model: QLSTMConfig, accel: AcceleratorConfig) -> Optional[str]:
 
 def run(qparams, x_int: Array, model: QLSTMConfig,
         accel: AcceleratorConfig) -> Array:
+    """Whole model, batch-major: (B, T, M) codes -> (B, P) codes."""
     return forward_int(qparams, x_int, model)
 
 

@@ -234,15 +234,16 @@ def resolve_stateful_backend(model: QLSTMConfig,
                              acc: AcceleratorConfig) -> str:
     """Backend choice for the cross-window STATEFUL path (`repro.serving`).
 
-    The fused Pallas kernel pins h0 = c0 = 0, so it cannot resume a stream
-    mid-sequence; wherever the stateless resolution lands on ``pallas``
-    (plan-auto or an explicit config choice) the stateful path substitutes
-    the layered ``ref`` oracle — bit-identical by the parity guarantee —
-    so every session keeps a usable stateful engine.  Other explicit
-    choices pass through; `backends.select_stateful` raises if the engine
+    Identical to the stateless resolution: every registered engine —
+    including the fused Pallas kernel, whose per-layer (h, c) VMEM scratch
+    is seeded from the carried state and returned after the last step —
+    implements ``run_stateful``, so the serving hot path runs on the same
+    engine ``plan()['backend']`` picks (docs/API.md §Backends documents
+    the full selection order).  Kept as its own resolution point so a
+    future stateless-only engine can be substituted away here again;
+    `backends.select_stateful` raises if an explicitly requested engine
     can't carry state."""
-    name = resolve_backend(model, acc)
-    return "ref" if name == "pallas" else name
+    return resolve_backend(model, acc)
 
 
 def plan(model: QLSTMConfig, acc: AcceleratorConfig) -> Dict:
@@ -264,9 +265,10 @@ def plan(model: QLSTMConfig, acc: AcceleratorConfig) -> Dict:
         "alu_mode": acc.alu_mode,
         "fxp": acc.fxp,
         "backend": resolve_backend(model, acc),
-        # The engine repro.serving uses for cross-window (h, c) carry — the
-        # fused kernel pins the carry at zero, so this can differ from
-        # "backend" (see resolve_stateful_backend).
+        # The engine repro.serving uses for cross-window (h, c) carry —
+        # currently always equal to "backend" (every engine is stateful;
+        # see resolve_stateful_backend), kept as its own key so serving
+        # code has one stable place to ask.
         "stateful_backend": resolve_stateful_backend(model, acc),
         # MXU tiles are 128x128: tiny LSTMs under-fill them, exactly like
         # tiny models under-fill DSP columns.  Report the padding waste.

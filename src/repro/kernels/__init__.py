@@ -1,6 +1,15 @@
-# Pallas TPU kernels for the paper's compute hot-spots (validated with
-# interpret=True on CPU against the pure-jnp oracles in ref.py):
-#   qlstm_cell  — fused quantised-LSTM sequence (pipelined ALU, C3)
-#   quant_matmul — tiled W8A8 matmul, int32 accum, fused S5 requant (C1)
-#   hard_act    — HardSigmoid*/HardTanh elementwise methods (C2)
+"""Pallas TPU kernels for the paper's compute hot-spots (validated with
+``interpret=True`` on CPU against the pure-jnp oracles in ``ref.py``):
+
+  * ``qlstm_cell``   — fused quantised-LSTM sequence (pipelined ALU, C3):
+    single-layer and fused multi-layer entries, both stateful — the
+    per-layer (h, c) VMEM scratch is seeded from a carried state and the
+    final state is returned, so the serving hot path resumes streams
+    mid-sequence on the fused kernel (docs/KERNELS.md is the internals
+    guide).
+  * ``quant_matmul`` — tiled W8A8 matmul, int32 accum, fused S5 requant
+    (C1).
+  * ``hard_act``     — HardSigmoid*/HardTanh elementwise methods (C2).
+"""
+
 from repro.kernels import ops, ref  # noqa: F401

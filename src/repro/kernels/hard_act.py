@@ -105,6 +105,9 @@ def hard_sigmoid_star_pallas(x_int: Array, *, cfg: FixedPointConfig,
 def hard_tanh_pallas(x_int: Array, *, cfg: FixedPointConfig,
                      min_val: float = -1.0, max_val: float = 1.0,
                      block: int = 1024, interpret: bool = True) -> Array:
+    """HardTanh on (rows, cols) integer codes: clip at the quantised
+    [min_val, max_val] thresholds (the same comparator pair the fused
+    cell kernel uses)."""
     import numpy as np
     lo = int(np.clip(np.floor(min_val * (1 << cfg.frac_bits) + 0.5),
                      cfg.int_min, cfg.int_max))

@@ -74,6 +74,8 @@ def quant_matmul_requant(x_int: Array, w_int: Array, cfg: FixedPointConfig,
 def hard_sigmoid_star_int(x_int: Array, cfg: FixedPointConfig,
                           method: str = "arithmetic", slope_shift: int = 3,
                           bound: float = 3.0, use_kernel: bool = True) -> Array:
+    """Integer HardSigmoid* (paper C2), any shape of codes in ``cfg``; the
+    three methods (arithmetic | 1to1 | step) are bit-identical."""
     if not use_kernel:
         return ref.hard_act_ref(x_int, cfg, method, slope_shift, bound)
     shape = x_int.shape
@@ -86,6 +88,8 @@ def hard_sigmoid_star_int(x_int: Array, cfg: FixedPointConfig,
 
 def hard_tanh_int(x_int: Array, cfg: FixedPointConfig, min_val: float = -1.0,
                   max_val: float = 1.0, use_kernel: bool = True) -> Array:
+    """Integer HardTanh (paper C2): clip the codes at the quantised
+    [min_val, max_val] thresholds."""
     if not use_kernel:
         return ref.hard_tanh_ref(x_int, cfg, min_val, max_val)
     shape = x_int.shape

@@ -16,17 +16,36 @@ ALU_resource_type = DSP | LUT            compute_unit = mxu (int8 systolic
 HardSigmoid* methods                      arithmetic (shift+add+selects) and
                                            step (unrolled comparator cascade);
                                            both bit-identical to the oracle.
+State registers (h, c) in SRAM           per-layer (h, c) VMEM scratch, seeded
+                                           from the carried state at t == 0 and
+                                           emitted as extra outputs at the last
+                                           step — the stream-resume contract of
+                                           ``repro.serving``.
 
 Grid = (batch_blocks, T); T is the minor axis, so the (h, c) VMEM scratch
-carries state across timesteps of one batch block and resets at t == 0.
+carries state across timesteps of one batch block.  At t == 0 the scratch
+is seeded from the ``(h0, c0)`` inputs (all-zero for a fresh stream), and
+at t == T-1 it is written to the final-state outputs, so a window-by-window
+resumed run is bit-identical to one concatenated run.
 
-Oracle: ``kernels/ref.py::qlstm_seq_ref`` (bit-exact).
+Two public entry points share one kernel builder:
+
+  * :func:`qlstm_seq_pallas` — one layer, optionally resumed from a carried
+    ``(h0, c0)`` and optionally returning the final state.
+  * :func:`qlstm_seq_multilayer_pallas` — the whole LSTM stack fused into
+    ONE ``pallas_call``: every layer's (h, c) stays resident in VMEM and
+    layer *l*'s hidden state at step *t* feeds layer *l+1* at the same step
+    without ever round-tripping through HBM (the Python-level per-layer
+    re-launch of ``backends.common.run_layered`` is exactly what this
+    removes from the serving hot path).
+
+Oracle: ``kernels/ref.py::qlstm_seq_ref`` (bit-exact, including the carry).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +61,7 @@ Array = jax.Array
 def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
                  hs_slope_shift: int, hs_bound: float,
                  ht_min: float, ht_max: float, compute_unit: str,
-                 t_len: int):
+                 t_len: int, num_layers: int):
     prod = product_config(cfg, cfg)
     shift = prod.frac_bits - cfg.frac_bits          # 2a -> a
     half = 1 << (shift - 1)
@@ -61,56 +80,143 @@ def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
     def requant(v):  # round-half-up shift + saturate: the single S5 rounding
         return jnp.clip((v + half) >> shift, lo, hi)
 
-    def kernel(x_ref, wx_ref, wh_ref, b_ref, out_ref, h_ref, c_ref):
+    def kernel(*refs):
+        # Ref layout (L = num_layers): x, L*w_x, L*w_h, L*b, L*h0, L*c0 |
+        # out, L*h_fin, L*c_fin | L*h_scratch, L*c_scratch.
+        n = num_layers
+        x_ref = refs[0]
+        wx = refs[1:1 + n]
+        wh = refs[1 + n:1 + 2 * n]
+        b = refs[1 + 2 * n:1 + 3 * n]
+        h0 = refs[1 + 3 * n:1 + 4 * n]
+        c0 = refs[1 + 4 * n:1 + 5 * n]
+        out_ref = refs[1 + 5 * n]
+        h_fin = refs[2 + 5 * n:2 + 6 * n]
+        c_fin = refs[2 + 6 * n:2 + 7 * n]
+        h_s = refs[2 + 7 * n:2 + 8 * n]
+        c_s = refs[2 + 8 * n:2 + 9 * n]
         t = pl.program_id(1)
 
         @pl.when(t == 0)
         def _():
-            h_ref[...] = jnp.zeros_like(h_ref)
-            c_ref[...] = jnp.zeros_like(c_ref)
+            # Seed the state scratch from the carried (h0, c0) — the zero
+            # reset state for a fresh stream, window k's final state when
+            # resuming window k+1.
+            for li in range(n):
+                h_s[li][...] = h0[li][...]
+                c_s[li][...] = c0[li][...]
 
         x_t = x_ref[0]                       # (bb, M) int carrier
-        h8 = h_ref[...].astype(x_t.dtype)    # stored codes fit the carrier
-        if compute_unit == "mxu":
-            # int8 x int8 -> int32 systolic matmul (the DSP analogue)
-            acc = jax.lax.dot_general(
-                x_t, wx_ref[...], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            acc += jax.lax.dot_general(
-                h8, wh_ref[...], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-        else:
-            # VPU: broadcast multiply + reduce (the LUT-fabric analogue)
-            acc = jnp.sum(x_t.astype(jnp.int32)[:, :, None]
-                          * wx_ref[...].astype(jnp.int32)[None, :, :], axis=1)
-            acc += jnp.sum(h8.astype(jnp.int32)[:, :, None]
-                           * wh_ref[...].astype(jnp.int32)[None, :, :], axis=1)
-        acc += b_ref[...]                    # bias at accumulator precision
-        pre = requant(acc)                   # late rounding (S5)
+        carrier = x_t.dtype
+        inp = x_t
+        for li in range(n):
+            h8 = h_s[li][...].astype(carrier)  # stored codes fit the carrier
+            if compute_unit == "mxu":
+                # int8 x int8 -> int32 systolic matmul (the DSP analogue)
+                acc = jax.lax.dot_general(
+                    inp, wx[li][...], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                acc += jax.lax.dot_general(
+                    h8, wh[li][...], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+            else:
+                # VPU: broadcast multiply + reduce (the LUT-fabric analogue)
+                acc = jnp.sum(inp.astype(jnp.int32)[:, :, None]
+                              * wx[li][...].astype(jnp.int32)[None, :, :],
+                              axis=1)
+                acc += jnp.sum(h8.astype(jnp.int32)[:, :, None]
+                               * wh[li][...].astype(jnp.int32)[None, :, :],
+                               axis=1)
+            acc += b[li][...]                # bias at accumulator precision
+            pre = requant(acc)               # late rounding (S5)
 
-        i = hs(pre[:, :hdim], spec)
-        f = hs(pre[:, hdim:2 * hdim], spec)
-        g = ht(pre[:, 2 * hdim:3 * hdim])
-        o = hs(pre[:, 3 * hdim:], spec)
+            i = hs(pre[:, :hdim], spec)
+            f = hs(pre[:, hdim:2 * hdim], spec)
+            g = ht(pre[:, 2 * hdim:3 * hdim])
+            o = hs(pre[:, 3 * hdim:], spec)
 
-        c = c_ref[...]
-        wide = f * c + i * g                 # both products wide, add, ...
-        c_new = requant(wide)                # ... round once
-        tanh_c = ht(c_new)
-        h_new = requant(o * tanh_c)
+            c = c_s[li][...]
+            wide = f * c + i * g             # both products wide, add, ...
+            c_new = requant(wide)            # ... round once
+            tanh_c = ht(c_new)
+            h_new = requant(o * tanh_c)
 
-        h_ref[...] = h_new
-        c_ref[...] = c_new
-        out_ref[0] = h_new.astype(out_ref.dtype)
+            h_s[li][...] = h_new
+            c_s[li][...] = c_new
+            # Layer-to-layer stream: layer li's step-t hidden state feeds
+            # layer li+1 at the same step, staying in VMEM/registers — no
+            # HBM round-trip between layers.
+            inp = h_new.astype(carrier)
+
+        out_ref[0] = inp.astype(out_ref.dtype)   # final layer's h_t
+
+        @pl.when(t == t_len - 1)
+        def _():
+            for li in range(n):
+                h_fin[li][...] = h_s[li][...]
+                c_fin[li][...] = c_s[li][...]
 
     return kernel
+
+
+def _qlstm_pallas(x_int, w_xs, w_hs, b_wides, h0s, c0s, *,
+                  cfg: FixedPointConfig, hs_method: str, hs_slope_shift: int,
+                  hs_bound: float, ht_min: float, ht_max: float,
+                  compute_unit: str, batch_block: Optional[int],
+                  interpret: bool):
+    """Shared driver behind both public entries: one ``pallas_call`` over
+    ``len(w_hs)`` fused layers, returning ``(out_seq, h_fin, c_fin)`` with
+    the per-layer final state as tuples."""
+    t_len, bsz, m = x_int.shape
+    n = len(w_hs)
+    hdim = w_hs[0].shape[0]
+    bb = batch_block or min(bsz, 128)
+    pad = (-bsz) % bb
+    if pad:
+        x_int = jnp.pad(x_int, ((0, 0), (0, pad), (0, 0)))
+        # Padding rows start from (and produce) garbage-free zero state;
+        # they are sliced away before return either way.
+        h0s = tuple(jnp.pad(h, ((0, pad), (0, 0))) for h in h0s)
+        c0s = tuple(jnp.pad(c, ((0, pad), (0, 0))) for c in c0s)
+    bsz_p = bsz + pad
+    nb = bsz_p // bb
+
+    kernel = _make_kernel(cfg, hdim, hs_method, hs_slope_shift, hs_bound,
+                          ht_min, ht_max, compute_unit, t_len, n)
+    resident = lambda bi, t: (0, 0)                    # fetched once, stays
+    per_block = lambda bi, t: (bi, 0)                  # constant across t
+    in_specs = [pl.BlockSpec((1, bb, m), lambda bi, t: (t, bi, 0))]
+    in_specs += [pl.BlockSpec(w.shape, resident) for w in w_xs]
+    in_specs += [pl.BlockSpec(w.shape, resident) for w in w_hs]
+    in_specs += [pl.BlockSpec((1, 4 * hdim), resident)] * n
+    in_specs += [pl.BlockSpec((bb, hdim), per_block)] * (2 * n)
+    out_specs = [pl.BlockSpec((1, bb, hdim), lambda bi, t: (t, bi, 0))]
+    out_specs += [pl.BlockSpec((bb, hdim), per_block)] * (2 * n)
+    out_shape = [jax.ShapeDtypeStruct((t_len, bsz_p, hdim), x_int.dtype)]
+    out_shape += [jax.ShapeDtypeStruct((bsz_p, hdim), jnp.int32)] * (2 * n)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nb, t_len),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bb, hdim), jnp.int32)] * (2 * n),
+        interpret=interpret,
+    )(x_int, *w_xs, *w_hs,
+      *(b.reshape(1, -1).astype(jnp.int32) for b in b_wides),
+      *(h.astype(jnp.int32) for h in h0s),
+      *(c.astype(jnp.int32) for c in c0s))
+    out = outs[0][:, :bsz]
+    h_fin = tuple(o[:bsz] for o in outs[1:1 + n])
+    c_fin = tuple(o[:bsz] for o in outs[1 + n:])
+    return out, h_fin, c_fin
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "hs_method", "hs_slope_shift", "hs_bound",
                      "ht_min", "ht_max", "compute_unit", "batch_block",
-                     "interpret"))
+                     "interpret", "return_state"))
 def qlstm_seq_pallas(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
                      *, cfg: FixedPointConfig,
                      hs_method: str = "arithmetic",
@@ -118,37 +224,86 @@ def qlstm_seq_pallas(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
                      ht_min: float = -1.0, ht_max: float = 1.0,
                      compute_unit: str = "mxu",
                      batch_block: Optional[int] = None,
-                     interpret: bool = True) -> Array:
-    """Run the fused kernel.
+                     interpret: bool = True,
+                     h0: Optional[Array] = None, c0: Optional[Array] = None,
+                     return_state: bool = False):
+    """Run the fused kernel for one layer.
 
     x_int: (T, B, M) integer codes (storage dtype of cfg);
     w_x: (M, 4H); w_h: (H, 4H); b_wide: (4H,) int32.
-    Returns (T, B, H) codes in the storage dtype.
+    h0/c0: optional (B, H) int32 initial carry (zeros when omitted — the
+    accelerator's reset state), seeded into the VMEM state scratch at
+    t == 0; bit-exact with ``kernels/ref.qlstm_seq_ref(h0, c0)``.
+    Returns (T, B, H) codes in the storage dtype; with
+    ``return_state=True``, ``(out, (h_last, c_last))`` so the caller can
+    resume the next window where this one left off.
     """
-    t_len, bsz, m = x_int.shape
+    _, bsz, _ = x_int.shape
     hdim = w_h.shape[0]
-    bb = batch_block or min(bsz, 128)
-    pad = (-bsz) % bb
-    if pad:
-        x_int = jnp.pad(x_int, ((0, 0), (0, pad), (0, 0)))
-    bsz_p = bsz + pad
-    nb = bsz_p // bb
+    if h0 is None:
+        h0 = jnp.zeros((bsz, hdim), jnp.int32)
+    if c0 is None:
+        c0 = jnp.zeros((bsz, hdim), jnp.int32)
+    out, (h_f,), (c_f,) = _qlstm_pallas(
+        x_int, (w_x,), (w_h,), (b_wide,), (h0,), (c0,),
+        cfg=cfg, hs_method=hs_method, hs_slope_shift=hs_slope_shift,
+        hs_bound=hs_bound, ht_min=ht_min, ht_max=ht_max,
+        compute_unit=compute_unit, batch_block=batch_block,
+        interpret=interpret)
+    if return_state:
+        return out, (h_f, c_f)
+    return out
 
-    kernel = _make_kernel(cfg, hdim, hs_method, hs_slope_shift, hs_bound,
-                          ht_min, ht_max, compute_unit, t_len)
-    out = pl.pallas_call(
-        kernel,
-        grid=(nb, t_len),
-        in_specs=[
-            pl.BlockSpec((1, bb, m), lambda bi, t: (t, bi, 0)),
-            pl.BlockSpec((m, 4 * hdim), lambda bi, t: (0, 0)),      # resident
-            pl.BlockSpec((hdim, 4 * hdim), lambda bi, t: (0, 0)),   # resident
-            pl.BlockSpec((1, 4 * hdim), lambda bi, t: (0, 0)),      # resident
-        ],
-        out_specs=pl.BlockSpec((1, bb, hdim), lambda bi, t: (t, bi, 0)),
-        out_shape=jax.ShapeDtypeStruct((t_len, bsz_p, hdim), x_int.dtype),
-        scratch_shapes=[pltpu.VMEM((bb, hdim), jnp.int32),
-                        pltpu.VMEM((bb, hdim), jnp.int32)],
-        interpret=interpret,
-    )(x_int, w_x, w_h, b_wide.reshape(1, -1).astype(jnp.int32))
-    return out[:, :bsz]
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "hs_method", "hs_slope_shift", "hs_bound",
+                     "ht_min", "ht_max", "compute_unit", "batch_block",
+                     "interpret"))
+def qlstm_seq_multilayer_pallas(x_int: Array, w_xs: Tuple[Array, ...],
+                                w_hs: Tuple[Array, ...],
+                                b_wides: Tuple[Array, ...],
+                                h0s: Tuple[Array, ...],
+                                c0s: Tuple[Array, ...], *,
+                                cfg: FixedPointConfig,
+                                hs_method: str = "arithmetic",
+                                hs_slope_shift: int = 3,
+                                hs_bound: float = 3.0,
+                                ht_min: float = -1.0, ht_max: float = 1.0,
+                                compute_unit: str = "mxu",
+                                batch_block: Optional[int] = None,
+                                interpret: bool = True):
+    """The whole LSTM stack, fused and stateful, in ONE ``pallas_call``.
+
+    x_int: (T, B, M) integer codes; ``w_xs``/``w_hs``/``b_wides`` are
+    per-layer tuples (layer 0's w_x is (M, 4H), deeper layers' (H, 4H);
+    every w_h is (H, 4H), every b_wide (4H,) int32); ``h0s``/``c0s`` are
+    the per-layer (B, H) int32 carry (``core.qlstm.init_int_state`` split
+    into its h and c halves for a fresh stream).
+
+    Every layer's (h, c) lives in VMEM scratch for the whole call and
+    layer *l*'s step-t output feeds layer *l+1* at the same step without
+    leaving the chip — unlike the layered Python loop, which launches one
+    kernel per layer and round-trips the full (T, B, H) sequence through
+    HBM between layers.
+
+    Returns ``(out, state)``: out is the final layer's (T, B, H) hidden
+    codes in the storage dtype; ``state`` is the per-layer
+    ``((h_last, c_last), ...)`` int32 carry after the last step —
+    bit-exact with threading ``kernels/ref.qlstm_seq_ref(h0, c0,
+    return_state=True)`` through the stack layer by layer.
+    """
+    n = len(w_hs)
+    if not (len(w_xs) == len(b_wides) == len(h0s) == len(c0s) == n):
+        raise ValueError(
+            f"per-layer tuples disagree on the layer count: "
+            f"w_xs={len(w_xs)}, w_hs={n}, b_wides={len(b_wides)}, "
+            f"h0s={len(h0s)}, c0s={len(c0s)}")
+    out, h_fin, c_fin = _qlstm_pallas(
+        x_int, tuple(w_xs), tuple(w_hs), tuple(b_wides), tuple(h0s),
+        tuple(c0s),
+        cfg=cfg, hs_method=hs_method, hs_slope_shift=hs_slope_shift,
+        hs_bound=hs_bound, ht_min=ht_min, ht_max=ht_max,
+        compute_unit=compute_unit, batch_block=batch_block,
+        interpret=interpret)
+    return out, tuple(zip(h_fin, c_fin))

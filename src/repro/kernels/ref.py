@@ -96,12 +96,14 @@ def quant_matmul_requant_ref(x: Array, w: Array, cfg: FixedPointConfig) -> Array
 
 def hard_act_ref(x_int: Array, cfg: FixedPointConfig, method: str = "arithmetic",
                  slope_shift: int = 3, bound: float = 3.0) -> Array:
+    """Integer HardSigmoid* oracle (all three methods, bit-identical)."""
     spec = hard_act.HardSigmoidStarSpec(cfg, slope_shift, bound)
     return hard_act.hs_star_int(x_int, spec, method)
 
 
 def hard_tanh_ref(x_int: Array, cfg: FixedPointConfig,
                   min_val: float = -1.0, max_val: float = 1.0) -> Array:
+    """Integer HardTanh oracle: clip at the quantised thresholds."""
     return hard_act.hard_tanh_int(x_int, cfg, min_val, max_val)
 
 

@@ -77,8 +77,9 @@ class ServingConfig:
     concurrent ``poll`` loop should set it.  ``max_streams``: LRU
     state-store capacity.  ``stateful``: carry (h, c) across a stream's windows
     (requires ``path="int"``); False gives the stateless
-    ``Accelerator.serve`` semantics.  ``backend``: stateful engine override
-    (``ref`` | ``xla``)."""
+    ``Accelerator.serve`` semantics.  ``backend``: engine override
+    (``ref`` | ``pallas`` | ``xla`` — all three carry state; the default
+    follows the plan's ``stateful_backend``, docs/API.md §Backends)."""
 
     batch: int = 256
     path: str = "int"

@@ -51,6 +51,73 @@ def test_qlstm_kernel_units_and_methods(unit, method):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("cfg", [FXP_4_8, FixedPointConfig(6, 8), FXP_8_16])
+@pytest.mark.parametrize("method", ["arithmetic", "step"])
+def test_qlstm_kernel_stateful_resume_bit_exact(cfg, method):
+    """Windowed execution with the carried (h, c) fed back into the kernel
+    equals the one-shot run — outputs AND final state, across fxp widths
+    and HardSigmoid* methods."""
+    from repro.kernels.qlstm_cell import qlstm_seq_pallas
+    x, wx, wh, b = _rand_lstm(9, 5, 2, 12, cfg)
+    want, (h_w, c_w) = ref.qlstm_seq_ref(x, wx, wh, b, cfg,
+                                         return_state=True)
+    outs, state = [], (None, None)
+    for w in range(3):                       # three windows of T=3
+        o, state = qlstm_seq_pallas(x[3 * w:3 * (w + 1)], wx, wh, b,
+                                    cfg=cfg, hs_method=method,
+                                    h0=state[0], c0=state[1],
+                                    return_state=True)
+        outs.append(np.asarray(o))
+    np.testing.assert_array_equal(np.concatenate(outs), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(state[0]), np.asarray(h_w))
+    np.testing.assert_array_equal(np.asarray(state[1]), np.asarray(c_w))
+
+
+@pytest.mark.parametrize("unit", ["mxu", "vpu"])
+@pytest.mark.parametrize("num_layers", [1, 2, 3])
+def test_qlstm_multilayer_kernel_vs_layered_ref(num_layers, unit):
+    """The fused multi-layer entry — all layers in ONE pallas_call, state
+    resident in VMEM — is bit-exact with threading the oracle through the
+    stack layer by layer, including the per-layer final state and a
+    non-zero initial carry."""
+    from repro.kernels.qlstm_cell import qlstm_seq_multilayer_pallas
+    cfg = FXP_4_8
+    T, B, M, H = 5, 5, 2, 12
+    x, wx0, wh0, b0 = _rand_lstm(T, B, M, H, cfg)
+    wxs, whs, bs = [wx0], [wh0], [b0]
+    for _ in range(num_layers - 1):
+        _, wxd, whd, bd = _rand_lstm(T, B, H, H, cfg)
+        wxs.append(wxd), whs.append(whd), bs.append(bd)
+    h0s = tuple(jnp.asarray(RNG.integers(-100, 100, (B, H)), jnp.int32)
+                for _ in range(num_layers))
+    c0s = tuple(jnp.asarray(RNG.integers(-100, 100, (B, H)), jnp.int32)
+                for _ in range(num_layers))
+    got, state = qlstm_seq_multilayer_pallas(
+        x, tuple(wxs), tuple(whs), tuple(bs), h0s, c0s, cfg=cfg,
+        compute_unit=unit, batch_block=2)        # batch 5 -> padded to 6
+    h_t = x
+    for li in range(num_layers):
+        h_t, (h_l, c_l) = ref.qlstm_seq_ref(
+            h_t.astype(x.dtype), wxs[li], whs[li], bs[li], cfg,
+            h0=h0s[li], c0=c0s[li], return_state=True)
+        np.testing.assert_array_equal(np.asarray(state[li][0]),
+                                      np.asarray(h_l))
+        np.testing.assert_array_equal(np.asarray(state[li][1]),
+                                      np.asarray(c_l))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(h_t))
+
+
+def test_qlstm_multilayer_kernel_rejects_mismatched_tuples():
+    """Per-layer tuples that disagree on the layer count fail loudly."""
+    from repro.kernels.qlstm_cell import qlstm_seq_multilayer_pallas
+    cfg = FXP_4_8
+    x, wx, wh, b = _rand_lstm(3, 2, 1, 4, cfg)
+    z = jnp.zeros((2, 4), jnp.int32)
+    with pytest.raises(ValueError, match="layer count"):
+        qlstm_seq_multilayer_pallas(x, (wx,), (wh, wh), (b,), (z,), (z,),
+                                    cfg=cfg)
+
+
 def test_qlstm_kernel_int16_datapath():
     """(8,16) — the baseline [15] width — through the same kernel."""
     cfg = FXP_8_16

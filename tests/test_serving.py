@@ -38,7 +38,7 @@ def _windows(n, seed=0, t=4, m=1):
 # Stateful carry — the bit-exactness contract
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", ["ref", "xla"])
+@pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
 def test_stateful_carry_equals_unbatched_sequence(sess, backend):
     """k windows through run_stateful == one forward over the k*T sequence,
     bit-exact at the integer-code level, multi-layer."""
@@ -376,21 +376,47 @@ def test_stateful_requires_int_path():
 
 
 def test_stateful_backend_selection(sess):
-    """Plan metadata: fused configs carry state on the layered ref oracle;
-    pallas is rejected explicitly; per-step configs use xla."""
-    assert sess.plan["stateful_backend"] == "ref"
-    assert set(sess.report()["stateful_backends"]) == {"ref", "xla"}
-    with pytest.raises(backends.BackendUnsupported, match="stateful"):
-        sess.compiled_stateful("pallas")
+    """Plan metadata: the stateful resolution now follows the stateless
+    one — fused configs carry state on the fused pallas kernel itself
+    (its VMEM scratch is seeded from the carry), per-step configs on
+    xla; every engine is stateful-capable."""
+    assert sess.plan["stateful_backend"] == "pallas"
+    assert sess.plan["stateful_backend"] == sess.plan["backend"]
+    assert set(sess.report()["stateful_backends"]) == {"ref", "pallas", "xla"}
+    sess.compiled_stateful("pallas")    # explicit request resolves too
     per_step = repro.build(MODEL,
                            AcceleratorConfig(alu_mode="per_step")).quantize()
     assert per_step.plan["stateful_backend"] == "xla"
     assert per_step.report()["stateful_backends"] == ("xla",)
-    # a session PINNED to pallas still gets a usable stateful engine (the
-    # bit-identical ref oracle), so StreamServer works on it
+    # per-step cannot run the fused kernel, stateful or not
+    with pytest.raises(backends.BackendUnsupported, match="alu_mode"):
+        per_step.compiled_stateful("pallas")
+    # a session PINNED to pallas carries state on pallas itself
     pinned = repro.build(MODEL, AcceleratorConfig(backend="pallas")).quantize()
-    assert pinned.plan["stateful_backend"] == "ref"
+    assert pinned.plan["stateful_backend"] == "pallas"
     pinned.compiled_stateful()          # resolves, no raise
+
+
+@pytest.mark.parametrize("num_layers", [1, 2, 3])
+def test_stream_server_carry_on_pallas_matches_concatenated(num_layers):
+    """The serving hot path on the fused kernel: windowed streaming with
+    the carry held by StreamServer, executed by the stateful pallas
+    backend, is bit-identical to the one-shot concatenated run — per
+    layer count."""
+    model = QLSTMConfig(input_size=1, hidden_size=8, num_layers=num_layers,
+                        seq_len=4)
+    s = repro.build(model, seed=0).quantize()
+    assert s.plan["stateful_backend"] == "pallas"
+    k, t = 3, model.seq_len
+    xs = _windows(k, seed=20 + num_layers)
+    with StreamServer(s, batch=2, deadline_s=0.005,
+                      backend="pallas") as srv:
+        for w in range(k):
+            srv.submit("s", xs[w])
+        by = {r.seq: r.y for r in srv.drain()}
+    full = np.asarray(s.infer(jnp.asarray(xs.reshape(1, k * t, 1)),
+                              path="int", backend="ref"))
+    np.testing.assert_array_equal(by[k - 1], full[0])
 
 
 def test_saturated_stateful_pipeline_does_not_deadlock(sess):

@@ -5,8 +5,9 @@
 Walks every ``.py`` file under the given paths and fails (exit 1) when a
 PUBLIC def/class/module — name not starting with ``_`` and not nested
 inside a function — has no docstring.  The CI docs job points this at
-``src/repro/serving`` so new serving surface cannot land undocumented;
-point it at more packages as their docs are brought up to standard.
+``src/repro/serving``, ``src/repro/kernels``, and ``src/repro/backends``
+so new surface in those packages cannot land undocumented; point it at
+more packages as their docs are brought up to standard.
 """
 
 from __future__ import annotations

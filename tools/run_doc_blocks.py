@@ -20,11 +20,22 @@ Conventions:
 
 from __future__ import annotations
 
+import os
 import re
 import sys
 import traceback
 
 FENCE_OPEN = re.compile(r"^```(\S+)?\s*(.*)$")
+
+
+class DocBlockError(Exception):
+    """A block failed: carries (path, block index, start line) so the
+    failure names exactly which fence to look at."""
+
+    def __init__(self, path: str, index: int, line: int):
+        super().__init__(f"{path}: block {index} (starting at line {line}) "
+                         f"raised")
+        self.path, self.index, self.line = path, index, line
 
 
 def python_blocks(path: str):
@@ -49,30 +60,47 @@ def python_blocks(path: str):
 
 def run_file(path: str) -> int:
     """Execute all blocks of one doc in a shared namespace; returns the
-    number of blocks executed.  Raises on the first failing block."""
+    number of blocks executed.  Raises :class:`DocBlockError` (chaining
+    the real exception) on the first failing block."""
     namespace = {"__name__": f"doc:{path}"}
     n = 0
-    for line, src in python_blocks(path):
-        print(f"[doc-exec] {path}:{line} ({len(src.splitlines())} lines)",
-              flush=True)
-        code = compile("\n" * (line - 1) + src, path, "exec")
-        exec(code, namespace)
+    for i, (line, src) in enumerate(python_blocks(path)):
+        print(f"[doc-exec] {path}:{line} block {i} "
+              f"({len(src.splitlines())} lines)", flush=True)
+        try:
+            # compile() inside the try: a SyntaxError in a block must name
+            # its fence like any other failure, not escape uncaught.
+            code = compile("\n" * (line - 1) + src, path, "exec")
+            exec(code, namespace)
+        except Exception as e:
+            raise DocBlockError(path, i, line) from e
         n += 1
     return n
 
 
 def main(paths) -> int:
+    """Run every doc; 0 iff each exists and all its blocks execute."""
     if not paths:
         print("usage: run_doc_blocks.py FILE.md [FILE.md ...]",
               file=sys.stderr)
         return 2
     status = 0
     for path in paths:
+        if not os.path.isfile(path):
+            # A doc this tool is pointed at that is not on disk is a CI
+            # configuration bug (deleted/renamed without updating the
+            # invocation) — name it instead of dumping an open() traceback.
+            print(f"[doc-exec] FAIL {path}: doc file does not exist "
+                  f"(block 0 never ran) — deleted or renamed without "
+                  f"updating the caller?", file=sys.stderr)
+            status = 1
+            continue
         try:
             n = run_file(path)
-        except Exception:
+        except DocBlockError as e:
             traceback.print_exc()
-            print(f"[doc-exec] FAIL {path}", file=sys.stderr)
+            print(f"[doc-exec] FAIL {e.path}: block {e.index} "
+                  f"(starting at line {e.line})", file=sys.stderr)
             status = 1
             continue
         if n == 0:
