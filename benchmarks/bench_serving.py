@@ -2,7 +2,8 @@
 headline (32 873 samples/s at 11.89 GOP/s/W on the XC7S15).
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
-      [--stateful-backend ref,xla,pallas] [out.json]
+      [--stateful-backend ref,xla,pallas] [--fault-rate F] [--chaos]
+      [out.json]
 
 Two scenarios through `repro.serving`:
 
@@ -18,12 +19,23 @@ Two scenarios through `repro.serving`:
     interpret mode, so CI's ``--smoke`` measures the pallas-interpret
     point and the numbers track the trajectory, not the FPGA's).
 
+Chaos axes (the PR-6 reliability layer, ``repro.serving.faults``):
+``--fault-rate F`` runs the stateful scenarios under a seeded
+:class:`FaultInjector` raising ``InjectedFault`` from a fraction ``F`` of
+wave executions — the benchmark then measures the RESILIENT throughput
+(retries/backoff absorb the faults) and each scenario's summary carries
+the ``faults`` block (retries, sheds, degradations, injected counts).
+``--chaos`` additionally injects latency spikes and state loss/corruption
+at fixed small rates, the full drill described in docs/SERVING.md
+§Reliability.
+
 Writes ``BENCH_serving.json``: per-scenario achieved samples/s, per-wave
-latency p50/p95/p99, GOP/s/W at the measured operating point, and the
-paper reference numbers.  Render with
+latency p50/p95/p99, GOP/s/W at the measured operating point, the
+``faults``/``health`` reliability blocks, and the paper reference
+numbers.  Render with
 ``python -m repro.analysis.report --serving BENCH_serving.json``.
-CI runs ``--smoke`` (small waves, CPU interpret mode) and uploads the
-artifact.
+CI runs ``--smoke --fault-rate 0.1`` (small waves, CPU interpret mode,
+seeded chaos) and uploads the artifact.
 """
 
 import json
@@ -34,7 +46,9 @@ PAPER_GOPS_PER_WATT = 11.89       # Table 4
 
 # 2: stateful scenarios keyed "stateful[<backend>]" with a "backend" field
 # (was one "stateful" key with the implicit plan engine).
-SCHEMA_VERSION = 2
+# 3: scenario summaries carry the "faults"/"health" reliability blocks and
+# the payload records the chaos axes under "chaos".
+SCHEMA_VERSION = 3
 
 STATEFUL_BACKENDS = ("ref", "xla", "pallas")
 
@@ -60,18 +74,39 @@ def _scenario_stateless(sess, n_windows, batch):
         return srv.metrics_summary()
 
 
+def _injector(fault_rate, chaos, seed=42):
+    """The seeded chaos harness for the requested axes (None when both are
+    off — the plain, uninjected benchmark)."""
+    if not fault_rate and not chaos:
+        return None
+    from repro.serving import FaultConfig, FaultInjector
+    cfg = FaultConfig(
+        wave_fault_rate=float(fault_rate or 0.0),
+        latency_spike_rate=0.05 if chaos else 0.0,
+        latency_spike_s=0.002,
+        state_loss_rate=0.02 if chaos else 0.0,
+        state_corrupt_rate=0.0,    # corruption breaks bit-exactness on
+    )                              # purpose; keep it to the chaos TESTS
+    return FaultInjector(cfg, seed=seed)
+
+
 def _scenario_stateful(sess, n_streams, windows_per_stream, batch,
-                       backend=None):
+                       backend=None, fault_rate=0.0, chaos=False):
     """Multiplexed named streams with cross-window carry on ``backend``
-    (None = the plan's ``stateful_backend``)."""
+    (None = the plan's ``stateful_backend``); ``fault_rate``/``chaos``
+    run the scenario under the seeded FaultInjector."""
     import numpy as np
     rng = np.random.default_rng(1)
     model = sess.model
     xs = rng.uniform(0, 1, (n_streams, windows_per_stream, model.seq_len,
                             model.input_size)).astype(np.float32)
-    from repro.serving import StreamServer
-    with StreamServer(sess, batch=batch, deadline_s=0.05, backend=backend,
-                      max_streams=max(16, n_streams)) as srv:
+    from repro.serving import ResiliencePolicy, ServingConfig, StreamServer
+    cfg = ServingConfig(batch=batch, deadline_s=0.05, backend=backend,
+                        max_streams=max(16, n_streams),
+                        resilience=ResiliencePolicy(
+                            max_retries=3, backoff_base_s=0.0005))
+    with StreamServer(sess, cfg,
+                      fault_injector=_injector(fault_rate, chaos)) as srv:
         srv.submit("warmup", xs[0, 0])      # compile outside the clock
         srv.drain()
         srv.end_stream("warmup")
@@ -91,10 +126,12 @@ def _row(name, summary):
 
 
 def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
-        stateful_backends=None):
+        stateful_backends=None, fault_rate: float = 0.0,
+        chaos: bool = False):
     """Measure the stateless scenario plus one stateful scenario per
-    requested engine; write the JSON payload and return the CSV-ish rows
-    the benchmark harness prints."""
+    requested engine (under the seeded chaos axes when requested); write
+    the JSON payload and return the CSV-ish rows the benchmark harness
+    prints."""
     import repro
     sess = repro.build().quantize()     # the paper's default configuration
     backends = tuple(stateful_backends) if stateful_backends \
@@ -110,19 +147,21 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
                                                      batch=16)
         for b in backends:
             scenarios[f"stateful[{b}]"] = _scenario_stateful(
-                sess, n_streams=8, windows_per_stream=4, batch=8, backend=b)
+                sess, n_streams=8, windows_per_stream=4, batch=8, backend=b,
+                fault_rate=fault_rate, chaos=chaos)
     else:
         scenarios["stateless"] = _scenario_stateless(sess, n_windows=4096,
                                                      batch=256)
         for b in backends:
             scenarios[f"stateful[{b}]"] = _scenario_stateful(
                 sess, n_streams=128, windows_per_stream=16, batch=64,
-                backend=b)
+                backend=b, fault_rate=fault_rate, chaos=chaos)
 
     payload = {
         "suite": "serving",
         "schema_version": SCHEMA_VERSION,
         "smoke": smoke,
+        "chaos": {"fault_rate": float(fault_rate), "chaos": bool(chaos)},
         "paper": {"samples_per_s": PAPER_SAMPLES_PER_S,
                   "gops_per_watt": PAPER_GOPS_PER_WATT},
         "scenarios": scenarios,
@@ -136,11 +175,14 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
 
 
 def main(argv):
-    """CLI: ``[--smoke] [--stateful-backend ref,xla,pallas] [out.json]``."""
+    """CLI: ``[--smoke] [--stateful-backend ref,xla,pallas]
+    [--fault-rate F] [--chaos] [out.json]``."""
     smoke = "--smoke" in argv
+    chaos = "--chaos" in argv
     stateful_backends = None
+    fault_rate = 0.0
     paths = []
-    it = iter(a for a in argv if a != "--smoke")
+    it = iter(a for a in argv if a not in ("--smoke", "--chaos"))
     for a in it:
         if a == "--stateful-backend" or a.startswith("--stateful-backend="):
             val = a.split("=", 1)[1] if "=" in a else next(it, "")
@@ -149,12 +191,22 @@ def main(argv):
                 raise SystemExit(
                     "--stateful-backend needs a comma list of "
                     f"{','.join(STATEFUL_BACKENDS)}")
+        elif a == "--fault-rate" or a.startswith("--fault-rate="):
+            val = a.split("=", 1)[1] if "=" in a else next(it, "")
+            try:
+                fault_rate = float(val)
+            except ValueError:
+                raise SystemExit(f"--fault-rate needs a float, got {val!r}")
+            if not 0.0 <= fault_rate < 1.0:
+                raise SystemExit(
+                    f"--fault-rate must be in [0, 1), got {fault_rate}")
         elif a.startswith("--"):
             raise SystemExit(f"unknown flag {a!r}")
         else:
             paths.append(a)
     rows = run(smoke=smoke, out_path=paths[0] if paths
-               else "BENCH_serving.json", stateful_backends=stateful_backends)
+               else "BENCH_serving.json", stateful_backends=stateful_backends,
+               fault_rate=fault_rate, chaos=chaos)
     print("name,us_per_call,derived")
     for n, us, d in rows:
         print(f"{n},{us:.2f},{d}")

@@ -163,7 +163,37 @@ def serving_table(payload: Dict) -> str:
             f"{s['mean_occupancy']:.1f}/{s['batch']} | "
             f"{s['deadline_flushes']} | {ev} | "
             f"{s['gops_per_watt']:.4f} |")
+    fault_rows = _serving_fault_rows(payload)
+    if fault_rows:
+        out += ["", "Reliability (schema >= 3: the PR-6 guarded-execution "
+                "layer; `injected` is the seeded chaos schedule that was "
+                "absorbed):", "",
+                "| scenario | served on | health | retries | wave failures |"
+                " sheds | rejections | degradations | promotions | "
+                "state resets | stream errors | injected faults |",
+                "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+        out += fault_rows
     return "\n".join(out)
+
+
+def _serving_fault_rows(payload: Dict) -> list:
+    """§Serving reliability rows — one per scenario carrying a ``faults``
+    block (empty for pre-PR-6 artifacts, keeping old JSONs renderable)."""
+    rows = []
+    for name, s in payload["scenarios"].items():
+        f = s.get("faults")
+        if f is None:
+            continue
+        inj = f.get("injected") or {}
+        n_inj = sum(v for k, v in inj.items() if k != "attempts")
+        health = (s.get("health") or {}).get("status", "—")
+        rows.append(
+            f"| {name} | {f['backend']}"
+            f"{' (degraded)' if f['degraded'] else ''} | {health} | "
+            f"{f['retries']} | {f['wave_failures']} | {f['sheds']} | "
+            f"{f['rejections']} | {f['degradations']} | {f['promotions']} | "
+            f"{f['state_resets']} | {f['stream_errors']} | {n_inj} |")
+    return rows
 
 
 def main():

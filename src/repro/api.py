@@ -227,6 +227,18 @@ class Accelerator:
         self._jitted[key] = fn
         return fn
 
+    def degradation_ladder(self, backend: Optional[str] = None,
+                           stateful: bool = True) -> Tuple[str, ...]:
+        """Ordered engine names the serving tier falls back through on
+        repeated backend failure (fastest first; all bit-identical on the
+        int path, so degrading changes latency, never results).  ``backend``
+        pins the preferred head of the ladder; ``stateful`` restricts it to
+        engines able to carry (h, c) across windows — see
+        ``backends.degradation_ladder`` and docs/SERVING.md §Reliability."""
+        return backends.degradation_ladder(self.model, self.accel,
+                                           override=backend,
+                                           stateful=stateful)
+
     def _require_quantized(self):
         if self.qparams is None:
             raise RuntimeError(

@@ -161,6 +161,32 @@ def stateful_backends(model: QLSTMConfig,
                  if _stateful_reason(_REGISTRY[n], model, accel) is None)
 
 
+# Canonical fastest-first engine order for graceful degradation: the fused
+# kernel, then the general scan, then the pure-jnp oracle.  All three are
+# bit-identical on the int path, so moving down the ladder changes
+# latency, never results.
+DEGRADATION_ORDER = ("pallas", "xla", "ref")
+
+
+def degradation_ladder(model: QLSTMConfig, accel: AcceleratorConfig,
+                       override: Optional[str] = None,
+                       stateful: bool = True) -> Tuple[str, ...]:
+    """Ordered engine names the serving tier degrades through on repeated
+    backend failure: the resolved (or explicitly ``override``-requested)
+    engine first, then every other engine capable of this configuration in
+    :data:`DEGRADATION_ORDER` (engines registered outside the canonical
+    order go last).  ``stateful`` restricts the ladder to engines with a
+    cross-window (h, c) entry point — the ``repro.serving`` case."""
+    first = (select_stateful if stateful else select)(
+        model, accel, override=override).name
+    capable = (stateful_backends if stateful else supported_backends)(
+        model, accel)
+    rest = [n for n in DEGRADATION_ORDER if n in capable and n != first]
+    rest += [n for n in capable
+             if n not in DEGRADATION_ORDER and n != first]
+    return (first, *rest)
+
+
 # Importing the submodules registers the engines.
 from repro.backends import pallas as _pallas  # noqa: E402,F401
 from repro.backends import ref as _ref        # noqa: E402,F401

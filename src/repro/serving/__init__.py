@@ -12,23 +12,41 @@ Public surface (docs/SERVING.md is the deployment guide):
 
   * :class:`StreamServer` — submit/poll/flush/close over named streams.
   * :class:`ServingConfig` — batch, deadline, backpressure, state-store
-    capacity.
-  * :class:`StreamResult` — (stream_id, seq, prediction) rows.
+    capacity, resilience and overload policies.
+  * :class:`StreamResult` — (stream_id, seq, prediction) rows, plus the
+    structured error/``state_reset`` reliability flags.
   * :class:`StateStore` — the bounded LRU carry store (exposed for tests
     and capacity planning).
+  * :class:`ResiliencePolicy` / :class:`ExecutionGuard` — guarded wave
+    execution: retry, timeout, backend degradation pallas -> xla -> ref
+    with recovery probes (``repro.serving.resilience``).
+  * :class:`OverloadPolicy` / :class:`ServerOverloaded` — admission
+    control and deadline-aware load shedding.
+  * :class:`FaultInjector` / :class:`FaultConfig` — the seeded chaos
+    harness (``repro.serving.faults``); :class:`InjectedFault` is what it
+    raises.
   * :func:`serve_windows` — ordered stateless mapping; the engine behind
     the ``Accelerator.serve`` / ``WaveBatcher.for_accelerator`` compat
     wrappers.
 """
 
+from repro.serving.faults import (FaultConfig, FaultInjector,    # noqa: F401
+                                  InjectedFault)
 from repro.serving.metrics import MetricsSink, WaveRecord        # noqa: F401
-from repro.serving.scheduler import Wave, WaveScheduler          # noqa: F401
+from repro.serving.resilience import (ExecutionGuard,            # noqa: F401
+                                      GuardOutcome, ResiliencePolicy,
+                                      WaveTimeout)
+from repro.serving.scheduler import (OverloadPolicy,             # noqa: F401
+                                     ServerOverloaded, Wave,
+                                     WaveScheduler)
 from repro.serving.server import (ServingConfig, StreamResult,   # noqa: F401
                                   StreamServer, serve_windows)
 from repro.serving.state import StateStore, StreamState          # noqa: F401
 
 __all__ = [
-    "MetricsSink", "ServingConfig", "StateStore", "StreamResult",
+    "ExecutionGuard", "FaultConfig", "FaultInjector", "GuardOutcome",
+    "InjectedFault", "MetricsSink", "OverloadPolicy", "ResiliencePolicy",
+    "ServerOverloaded", "ServingConfig", "StateStore", "StreamResult",
     "StreamServer", "StreamState", "Wave", "WaveRecord", "WaveScheduler",
-    "serve_windows",
+    "WaveTimeout", "serve_windows",
 ]

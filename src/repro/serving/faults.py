@@ -1,0 +1,229 @@
+"""Deterministic fault injection for the serving tier — the chaos harness.
+
+The paper's deployment is always-on embedded inference; a serving stack
+that only works when nothing ever fails is not that deployment.  This
+module makes failure a *testable input*: a seedable :class:`FaultInjector`
+wraps the two surfaces where production faults land —
+
+  * the **backend execute path** (:meth:`FaultInjector.wrap_fn`): injected
+    compute exceptions (a Pallas lowering hiccup, a device error) and
+    latency spikes (a descheduled host thread, a contended device);
+  * the **state store** (:meth:`FaultInjector.wrap_state_store`): state
+    *loss* (a carry silently dropped, as a crashed replica would) and
+    state *corruption* (bit flips in the stored (h, c) codes).
+
+Everything is driven by one ``numpy`` PCG64 generator, so a given
+``(seed, rates)`` pair injects the exact same schedule every run — chaos
+tests assert exact counter values, not "some faults probably happened".
+The injector records what it did (:meth:`stats`, :attr:`corrupted_streams`,
+:attr:`lost_streams`), so a test can partition streams into *survivors*
+(untouched by state faults — these must stay bit-exact with the
+concatenated-sequence oracle) and *casualties* (these must be *flagged*,
+via ``StreamResult.state_reset`` or an error, never silently wrong).
+
+The injector is inert by default: every rate is 0.0, and a
+``StreamServer`` built without one pays no wrapping cost at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, Hashable, List, Optional, Set
+
+import numpy as np
+
+from repro.serving.state import StateStore, StreamState
+
+
+class InjectedFault(RuntimeError):
+    """The exception :class:`FaultInjector` raises on the execute path.
+
+    A distinct type so the resilience layer (and tests) can tell an
+    injected fault from a real defect — real defects must still surface."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-surface fault rates, all probabilities per *event* in [0, 1].
+
+    ``wave_fault_rate``: chance one execute *attempt* raises
+    :class:`InjectedFault` (retries draw independently, so a retried wave
+    usually lands).  ``latency_spike_rate`` / ``latency_spike_s``: chance
+    an attempt sleeps ``latency_spike_s`` before computing (drives the
+    guard's timeout path).  ``state_loss_rate``: chance a ``put`` into the
+    state store is silently dropped — the stream's next window starts from
+    the reset carry exactly like an LRU eviction.  ``state_corrupt_rate``:
+    chance a ``put`` stores bitwise-perturbed (h, c) codes (the stream's
+    id is recorded so tests can exclude it from bit-exactness)."""
+
+    wave_fault_rate: float = 0.0
+    latency_spike_rate: float = 0.0
+    latency_spike_s: float = 0.05
+    state_loss_rate: float = 0.0
+    state_corrupt_rate: float = 0.0
+
+    def __post_init__(self):
+        """Validate every rate is a probability."""
+        for f in ("wave_fault_rate", "latency_spike_rate",
+                  "state_loss_rate", "state_corrupt_rate"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1], got {v}")
+        if self.latency_spike_s < 0:
+            raise ValueError(
+                f"latency_spike_s must be >= 0, got {self.latency_spike_s}")
+
+
+class FaultInjector:
+    """Seeded chaos source for one ``StreamServer`` run.
+
+    One injector owns one PCG64 stream; draws are serialised under a lock
+    (the execute path and the state store live on different threads), so
+    the injected schedule is a pure function of ``(seed, config)`` and the
+    order of events.  Construct with either a :class:`FaultConfig` or the
+    equivalent keyword rates::
+
+        inj = FaultInjector(seed=7, wave_fault_rate=0.2)
+        server = StreamServer(sess, batch=8, fault_injector=inj)
+    """
+
+    def __init__(self, config: Optional[FaultConfig] = None, *,
+                 seed: int = 0, **rates):
+        """``config`` or keyword rates (``wave_fault_rate=...``, see
+        :class:`FaultConfig`); ``seed`` fixes the injection schedule."""
+        if config is not None and rates:
+            raise ValueError("pass a FaultConfig or keyword rates, not both")
+        self.config = config or FaultConfig(**rates)
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self._counts: Dict[str, int] = {
+            "attempts": 0, "wave_faults": 0, "latency_spikes": 0,
+            "state_losses": 0, "state_corruptions": 0}
+        #: Stream ids whose stored carry was bitwise-perturbed — their
+        #: outputs are expected to diverge from the oracle.
+        self.corrupted_streams: Set[Hashable] = set()
+        #: Stream ids that lost a carry — their next window restarts from
+        #: the reset state (and must be flagged ``state_reset``).
+        self.lost_streams: Set[Hashable] = set()
+
+    def _draw(self, rate: float) -> bool:
+        return rate > 0.0 and float(self._rng.random()) < rate
+
+    # -- execute-path surface ------------------------------------------------
+
+    def wrap_fn(self, fn: Callable, label: str = "") -> Callable:
+        """Wrap a compiled datapath callable: each call first draws a
+        latency spike (sleep), then a compute fault (:class:`InjectedFault`)
+        — in that fixed order, so the schedule is deterministic — then
+        delegates.  ``label`` names the wrapped engine in the raise."""
+        cfg = self.config
+
+        def chaotic(*args, **kwargs):
+            with self._lock:
+                self._counts["attempts"] += 1
+                spike = self._draw(cfg.latency_spike_rate)
+                fault = self._draw(cfg.wave_fault_rate)
+                if spike:
+                    self._counts["latency_spikes"] += 1
+                if fault:
+                    self._counts["wave_faults"] += 1
+            if spike:
+                time.sleep(cfg.latency_spike_s)
+            if fault:
+                raise InjectedFault(
+                    f"injected compute fault"
+                    f"{f' on {label}' if label else ''} "
+                    f"(seed={self.seed}, attempt "
+                    f"{self._counts['attempts']})")
+            return fn(*args, **kwargs)
+
+        return chaotic
+
+    # -- state-store surface -------------------------------------------------
+
+    def wrap_state_store(self, store: StateStore) -> "FaultyStateStore":
+        """A delegating view of ``store`` whose ``put`` may drop or corrupt
+        carries according to the configured rates."""
+        return FaultyStateStore(store, self)
+
+    def _mutate_put(self, stream_id: Hashable,
+                    state: StreamState) -> Optional[StreamState]:
+        """The put-side injection: ``None`` means drop the put entirely
+        (state loss); otherwise the possibly-corrupted state to store."""
+        with self._lock:
+            lose = self._draw(self.config.state_loss_rate)
+            corrupt = (not lose) and self._draw(self.config.state_corrupt_rate)
+            if lose:
+                self._counts["state_losses"] += 1
+                self.lost_streams.add(stream_id)
+                return None
+            if not corrupt:
+                return state
+            self._counts["state_corruptions"] += 1
+            self.corrupted_streams.add(stream_id)
+            # XOR a low bit of every code: bitwise-plausible corruption
+            # that is guaranteed to change the carry.
+            return [(np.bitwise_xor(h, 1), np.bitwise_xor(c, 1))
+                    for h, c in state]
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        """Injection counters (attempts seen, faults/spikes/losses/
+        corruptions injected) — the ``faults.injected`` block of
+        ``metrics_summary()``."""
+        with self._lock:
+            return dict(self._counts)
+
+
+class FaultyStateStore:
+    """A :class:`~repro.serving.state.StateStore` view with injected
+    ``put`` faults; every other method delegates verbatim.
+
+    Kept API-compatible with ``StateStore`` (``get``/``put``/``pop``/
+    ``stats``/``__len__``/``__contains__``/``capacity``) so
+    ``StreamServer`` and its tests cannot tell the difference — which is
+    the point."""
+
+    def __init__(self, store: StateStore, injector: FaultInjector):
+        """Wrap ``store`` with the injector's put-side schedule."""
+        self._store = store
+        self._injector = injector
+
+    @property
+    def capacity(self) -> int:
+        """The wrapped store's capacity."""
+        return self._store.capacity
+
+    def get(self, stream_id: Hashable) -> Optional[StreamState]:
+        """Delegates to the wrapped store (reads are never faulted — a
+        lost carry is modelled at put time, like a crashed replica)."""
+        return self._store.get(stream_id)
+
+    def put(self, stream_id: Hashable,
+            state: StreamState) -> List[Hashable]:
+        """Store the carry — unless the schedule drops it (the stream's
+        existing carry is also popped, so the loss is observable) or
+        corrupts it first."""
+        mutated = self._injector._mutate_put(stream_id, state)
+        if mutated is None:
+            self._store.pop(stream_id)
+            return []
+        return self._store.put(stream_id, mutated)
+
+    def pop(self, stream_id: Hashable) -> Optional[StreamState]:
+        """Delegates to the wrapped store."""
+        return self._store.pop(stream_id)
+
+    def stats(self) -> Dict[str, int]:
+        """The wrapped store's counters."""
+        return self._store.stats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, stream_id: Hashable) -> bool:
+        return stream_id in self._store

@@ -63,6 +63,19 @@ class MetricsSink:
         self._n_deadline_flushes = 0
         self._n_padded_slots = 0
         self._compute_s_total = 0.0
+        self._counters: Dict[str, int] = collections.defaultdict(int)
+
+    def count(self, name: str, n: int = 1) -> None:
+        """Bump a named event counter (``state_resets``, ``sheds``,
+        ``stream_errors``, ... — the reliability layer's events); read
+        back with :meth:`counters`."""
+        with self._lock:
+            self._counters[name] += n
+
+    def counters(self) -> Dict[str, int]:
+        """Snapshot of the named event counters."""
+        with self._lock:
+            return dict(self._counters)
 
     def note_submit(self, t: float) -> None:
         """Record a submission timestamp (keeps the earliest)."""

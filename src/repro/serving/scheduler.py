@@ -27,19 +27,77 @@ deadline, a SATURATION flush fires when pending hits ``max_pending`` and
 no full wave can be assembled (one-window-per-stream, or ``max_pending``
 < ``batch``): submitters are blocked at that point, so waiting for a
 quorum that cannot form would deadlock the pipeline.
+
+OVERLOAD behaviour is opt-in via :class:`OverloadPolicy`: admission
+control turns the blocking ``submit`` into a bounded-latency reject
+(:class:`ServerOverloaded`) once the pending queue is saturated and the
+rolling deadline-miss rate says the backlog is not clearing, and
+deadline-aware load shedding drops pending windows whose wait already
+exceeds ``shed_after_s`` (their deadline is hopeless; computing them
+would only delay windows that can still make theirs) through the
+``on_shed`` callback instead of computing them.  Both are accounted:
+``stats()`` feeds the serving health snapshot.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Hashable, List, Optional, Tuple
+from typing import (Callable, Deque, Dict, Hashable, List, Optional,
+                    Tuple)
 
 import numpy as np
 
 _SENTINEL = object()
+
+
+class ServerOverloaded(RuntimeError):
+    """``submit`` rejected by admission control: the pending queue is
+    saturated and the rolling deadline-miss rate shows the backlog is not
+    clearing.  The client should back off (or route elsewhere) — blocking
+    it would only add latency to a request that will miss its deadline
+    anyway."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Admission-control and load-shedding knobs (all opt-in; the default
+    scheduler keeps the legacy block-on-backpressure behaviour).
+
+    ``admission``: ``"reject"`` raises :class:`ServerOverloaded` from
+    ``submit`` instead of blocking once pending is saturated AND the
+    rolling deadline-miss rate is >= ``reject_miss_rate``; ``"block"``
+    keeps blocking (shedding can still be on).  ``reject_miss_rate``: the
+    miss-rate gate for rejection — 0.0 rejects on queue depth alone; with
+    no deadline configured the miss rate is always 0.0, so any positive
+    gate disables rejection.  ``shed_after_s``: a pending window that has
+    already waited this long is dropped (reported through the scheduler's
+    ``on_shed`` callback as an error result) rather than computed —
+    deadline-aware shedding, typically a small multiple of ``deadline_s``.
+    ``miss_window``: waves in the rolling deadline-miss window."""
+
+    admission: str = "reject"
+    reject_miss_rate: float = 0.0
+    shed_after_s: Optional[float] = None
+    miss_window: int = 64
+
+    def __post_init__(self):
+        """Validate the policy's gates and bounds."""
+        if self.admission not in ("reject", "block"):
+            raise ValueError(f"admission must be 'reject' or 'block', got "
+                             f"{self.admission!r}")
+        if not 0.0 <= self.reject_miss_rate <= 1.0:
+            raise ValueError(f"reject_miss_rate must be in [0, 1], got "
+                             f"{self.reject_miss_rate}")
+        if self.shed_after_s is not None and self.shed_after_s <= 0:
+            raise ValueError(f"shed_after_s must be > 0, got "
+                             f"{self.shed_after_s}")
+        if self.miss_window < 1:
+            raise ValueError(f"miss_window must be >= 1, got "
+                             f"{self.miss_window}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,10 +147,15 @@ class WaveScheduler:
 
     def __init__(self, batch: int, execute: Callable[[Wave], None], *,
                  one_per_stream: bool, deadline_s: Optional[float] = None,
-                 queue_depth: int = 2, max_pending: Optional[int] = None):
+                 queue_depth: int = 2, max_pending: Optional[int] = None,
+                 overload: Optional[OverloadPolicy] = None,
+                 on_shed: Optional[Callable[[Slot], None]] = None):
         """``batch``: static wave size; ``queue_depth``: assembled waves the
         compute thread may fall behind by; ``max_pending``: bound on
-        unassembled windows (None -> 4 * batch)."""
+        unassembled windows (None -> 4 * batch); ``overload``: admission/
+        shedding policy (None = always block, never shed); ``on_shed``:
+        called (assembler thread) once per shed window with its
+        :class:`Slot` so the owner can emit an error result."""
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         if queue_depth < 1:
@@ -104,6 +167,8 @@ class WaveScheduler:
         self.batch = batch
         self.deadline_s = deadline_s
         self.max_pending = 4 * batch if max_pending is None else max_pending
+        self.overload = overload
+        self._on_shed = on_shed
         self._execute = execute
         self._one_per_stream = one_per_stream
         self._pending: List[_Pending] = []
@@ -115,10 +180,20 @@ class WaveScheduler:
         self._closing = False       # drain everything, then stop
         self._stop = False          # stop ASAP, abandon pending work
         self._error: Optional[BaseException] = None
+        # Rolling deadline-miss window (True = the wave's oldest window
+        # exceeded deadline_s end-to-end) — drives admission control.
+        self._misses: Deque[bool] = collections.deque(
+            maxlen=overload.miss_window if overload else 64)
+        self._sheds = 0
+        self._rejections = 0
+        self._recoveries = 0
+        #: Thread names still alive after the last close() — leaked.
+        self.leaked_threads: List[str] = []
         self._assembler = threading.Thread(target=self._assemble_loop,
-                                           daemon=True)
+                                           daemon=True,
+                                           name="wave-assembler")
         self._compute = threading.Thread(target=self._compute_loop,
-                                         daemon=True)
+                                         daemon=True, name="wave-compute")
         self._assembler.start()
         self._compute.start()
 
@@ -134,10 +209,26 @@ class WaveScheduler:
         before the window joins the pending list — so the caller's
         per-stream sequence numbering and the FIFO insertion order cannot
         be reordered between concurrently submitting threads.  Returns the
-        allocated sequence number."""
+        allocated sequence number.
+
+        With a reject-mode :class:`OverloadPolicy`, a submit that would
+        block on a saturated queue while the rolling deadline-miss rate is
+        at or above ``reject_miss_rate`` raises :class:`ServerOverloaded`
+        instead — bounded-latency admission control."""
         with self._cond:
             while (not self._closing and self._error is None
                    and len(self._pending) >= self.max_pending):
+                if (self.overload is not None
+                        and self.overload.admission == "reject"
+                        and self._miss_rate_locked()
+                        >= self.overload.reject_miss_rate):
+                    self._rejections += 1
+                    raise ServerOverloaded(
+                        f"admission rejected: {len(self._pending)}/"
+                        f"{self.max_pending} windows pending, rolling "
+                        f"deadline-miss rate "
+                        f"{self._miss_rate_locked():.2f} >= "
+                        f"{self.overload.reject_miss_rate:.2f}")
                 self._cond.wait(timeout=0.1)
             self._raise_if_dead()
             seq = alloc_seq()
@@ -180,34 +271,70 @@ class WaveScheduler:
                 self._draining -= 1
                 self._cond.notify_all()
 
-    def close(self, abandon: bool = False) -> None:
+    def close(self, abandon: bool = False,
+              timeout: float = 30.0) -> List[str]:
         """Stop the pipeline.  Default: drain pending windows first (every
         submitted window gets computed); ``abandon=True`` stops ASAP and
         discards pending work (the consumer walked away).
 
-        If the drain cannot complete within the join timeout — e.g. a
-        bounded results queue (``max_results``) wedged by a consumer that
-        stopped polling — close escalates to abandon so the worker threads
-        exit instead of leaking, and returns in bounded time."""
+        If the drain cannot complete within ``timeout`` — e.g. a bounded
+        results queue (``max_results``) wedged by a consumer that stopped
+        polling — close escalates to abandon so the worker threads exit
+        instead of leaking, and returns in bounded time.  Returns the
+        names of any threads STILL alive after the escalated join (also
+        kept on :attr:`leaked_threads`) — an empty list is the clean
+        shutdown; a non-empty one means a wave is wedged inside the
+        datapath and the daemon thread will die with the process."""
         with self._cond:
             if abandon:
                 self._stop = True
             self._closing = True
             self._cond.notify_all()
-        self._assembler.join(timeout=30)
-        self._compute.join(timeout=30)
+        self._assembler.join(timeout=timeout)
+        self._compute.join(timeout=timeout)
         if self._assembler.is_alive() or self._compute.is_alive():
             with self._cond:
                 self._stop = True
                 self._cond.notify_all()
-            self._assembler.join(timeout=30)
-            self._compute.join(timeout=30)
+            self._assembler.join(timeout=timeout)
+            self._compute.join(timeout=timeout)
+        self.leaked_threads = [t.name for t in (self._assembler,
+                                                self._compute)
+                               if t.is_alive()]
+        return self.leaked_threads
 
     @property
     def error(self) -> Optional[BaseException]:
-        """The compute thread's failure, if any (re-raised by submit/flush
-        and by ``StreamServer.poll``)."""
+        """The compute thread's MOST RECENT unrecovered failure (re-raised
+        by submit/flush and by ``StreamServer.poll``).  Cleared when a
+        later wave completes cleanly — a transient fault must not poison
+        every subsequent call forever (``stats()["recoveries"]`` counts
+        the clears)."""
         return self._error
+
+    def _miss_rate_locked(self) -> float:
+        """Rolling deadline-miss rate; caller holds ``_cond``."""
+        return (sum(self._misses) / len(self._misses)) if self._misses \
+            else 0.0
+
+    def miss_rate(self) -> float:
+        """Fraction of the last ``miss_window`` waves whose oldest window
+        exceeded ``deadline_s`` end-to-end (0.0 with no deadline)."""
+        with self._cond:
+            return self._miss_rate_locked()
+
+    def stats(self) -> Dict[str, float]:
+        """Overload/recovery counters for the serving health snapshot:
+        pending depth, rolling miss rate, lifetime sheds/rejections/
+        recoveries, and the error-state flag."""
+        with self._cond:
+            return {"pending": len(self._pending),
+                    "max_pending": self.max_pending,
+                    "deadline_miss_rate": self._miss_rate_locked(),
+                    "sheds": self._sheds,
+                    "rejections": self._rejections,
+                    "recoveries": self._recoveries,
+                    "dead": self._error is not None}
 
     @property
     def stopped(self) -> bool:
@@ -240,6 +367,20 @@ class WaveScheduler:
 
     def _assemble_loop(self):
         while True:
+            shed = self._shed_expired()
+            if shed:
+                for p in shed:
+                    if self._on_shed is not None:
+                        self._on_shed(Slot(p.stream_id, p.seq, p.sub_idx))
+                with self._cond:
+                    # A shed window is accounted as completed (flush must
+                    # not wait forever for work that was dropped) only
+                    # AFTER its error result was emitted, so drain() sees
+                    # the row.
+                    self._completed += len(shed)
+                    self._sheds += len(shed)
+                    self._cond.notify_all()
+                continue
             with self._cond:
                 if self._stop:
                     break
@@ -272,6 +413,24 @@ class WaveScheduler:
             if not self._put_wave(wave):
                 break
         self._put_wave(_SENTINEL)
+
+    def _shed_expired(self) -> List[_Pending]:
+        """Remove and return pending windows whose wait already exceeds
+        the policy's ``shed_after_s`` (their deadline is hopeless —
+        computing them would only delay windows that can still make
+        theirs).  Empty when shedding is off."""
+        if self.overload is None or self.overload.shed_after_s is None:
+            return []
+        with self._cond:
+            if self._stop or not self._pending:
+                return []
+            cutoff = time.perf_counter() - self.overload.shed_after_s
+            shed = [p for p in self._pending if p.t_submit <= cutoff]
+            if shed:
+                self._pending = [p for p in self._pending
+                                 if p.t_submit > cutoff]
+                self._cond.notify_all()   # wake blocked submitters
+            return shed
 
     def _build_wave(self, chosen: List[_Pending],
                     deadline_flush: bool) -> Wave:
@@ -309,12 +468,24 @@ class WaveScheduler:
                 continue
             if item is _SENTINEL:
                 return
-            if not self._stop and self._error is None:
+            if not self._stop:
+                # Waves keep executing even while _error is set: one
+                # failed wave must not condemn every later one unseen.
                 try:
                     self._execute(item)
+                    with self._cond:
+                        if self._error is not None:
+                            # A later wave completed cleanly: the failure
+                            # was transient, stop re-raising it forever.
+                            self._error = None
+                            self._recoveries += 1
                 except BaseException as e:  # surfaced to clients
                     with self._cond:
                         self._error = e
             with self._cond:
+                if self.deadline_s is not None:
+                    self._misses.append(
+                        time.perf_counter() - item.t_oldest
+                        > self.deadline_s)
                 self._completed += item.occupancy
                 self._cond.notify_all()

@@ -40,8 +40,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.faults import FaultInjector
 from repro.serving.metrics import MetricsSink, WaveRecord
-from repro.serving.scheduler import Wave, WaveScheduler
+from repro.serving.resilience import ExecutionGuard, ResiliencePolicy
+from repro.serving.scheduler import (OverloadPolicy, Slot, Wave,
+                                     WaveScheduler)
 from repro.serving.state import StateStore
 
 
@@ -79,7 +82,12 @@ class ServingConfig:
     (requires ``path="int"``); False gives the stateless
     ``Accelerator.serve`` semantics.  ``backend``: engine override
     (``ref`` | ``pallas`` | ``xla`` — all three carry state; the default
-    follows the plan's ``stateful_backend``, docs/API.md §Backends)."""
+    follows the plan's ``stateful_backend``, docs/API.md §Backends).
+
+    ``resilience``: the guarded-execution policy (retry/backoff/timeout +
+    backend degradation, docs/SERVING.md §Reliability); every wave runs
+    under it.  ``overload``: admission-control / load-shedding policy
+    (None = legacy block-on-backpressure, never shed)."""
 
     batch: int = 256
     path: str = "int"
@@ -90,6 +98,8 @@ class ServingConfig:
     max_pending: Optional[int] = None
     max_results: Optional[int] = None
     max_streams: int = 1024
+    resilience: ResiliencePolicy = ResiliencePolicy()
+    overload: Optional[OverloadPolicy] = None
 
     def __post_init__(self):
         """Reject contradictory settings at construction time."""
@@ -101,16 +111,39 @@ class ServingConfig:
         if self.max_results is not None and self.max_results < 1:
             raise ValueError(
                 f"max_results must be >= 1, got {self.max_results}")
+        if self.resilience is None:
+            raise ValueError(
+                "resilience cannot be None — pass ResiliencePolicy("
+                "max_retries=0) to minimise guarding instead of disabling "
+                "it")
 
 
 @dataclasses.dataclass(frozen=True)
 class StreamResult:
-    """One prediction: stream it belongs to, its per-stream sequence number
-    (the value ``submit`` returned), and the (P,) float prediction."""
+    """One prediction — or one structured per-stream failure.
+
+    ``stream_id``/``seq`` identify the window (``seq`` is the value
+    ``submit`` returned).  ``y`` is the (P,) float prediction, or ``None``
+    when ``error`` is set: ``"shed"`` (deadline-aware load shedding
+    dropped the window uncomputed) or a ``"compute_failed: ..."``
+    description (every engine of the degradation ladder failed the wave).
+    ``state_reset`` flags a window computed from the all-zero reset carry
+    although the stream had history (LRU eviction, injected state loss, or
+    a failed wave dropped it) — the prediction is a valid LSTM output, it
+    just lost the history; silent before, now reported.  ``backend`` names
+    the engine that computed the window (None for error rows)."""
 
     stream_id: Hashable
     seq: int
-    y: np.ndarray
+    y: Optional[np.ndarray]
+    error: Optional[str] = None
+    state_reset: bool = False
+    backend: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        """True for a real prediction, False for a shed/failed window."""
+        return self.error is None
 
 
 class StreamServer:
@@ -122,11 +155,14 @@ class StreamServer:
     and dropped — they are never emitted and never touch the state store."""
 
     def __init__(self, sessions, config: Optional[ServingConfig] = None,
+                 fault_injector: Optional[FaultInjector] = None,
                  **overrides):
         """``sessions``: one ``Accelerator`` or a list of replicas of the
         same configuration (waves round-robin across them).  ``config`` or
         keyword overrides (``batch=``, ``deadline_s=``, ...) set the
-        :class:`ServingConfig`."""
+        :class:`ServingConfig`.  ``fault_injector`` (tests/chaos drills
+        only) wraps the execute path and the state store with a seeded
+        fault schedule — see ``repro.serving.faults``."""
         sessions = list(sessions) if isinstance(sessions, (list, tuple)) \
             else [sessions]
         if not sessions:
@@ -148,13 +184,39 @@ class StreamServer:
             cfg = dataclasses.replace(cfg, **overrides)
         self.config = cfg
         self._sessions = sessions
-        # Compile/validate NOW: a bad path/backend or an unquantised session
-        # fails at construction, not in the compute thread.
+        self.fault_injector = fault_injector
+        # Resolve the degradation ladder and compile/validate NOW: a bad
+        # path/backend or an unquantised session fails at construction,
+        # not in the compute thread.  jit closures are lazy, so non-
+        # preferred ladder levels cost nothing until a degradation
+        # actually runs them.
+        from repro import backends as _backends
         if cfg.stateful:
-            self._fns = [s.compiled_stateful(cfg.backend) for s in sessions]
+            ladder = _backends.degradation_ladder(
+                sessions[0].model, sessions[0].accel, override=cfg.backend,
+                stateful=True)
+            self._fns = [[(n, s.compiled_stateful(n)) for n in ladder]
+                         for s in sessions]
+        elif cfg.path == "int":
+            ladder = _backends.degradation_ladder(
+                sessions[0].model, sessions[0].accel, override=cfg.backend,
+                stateful=False)
+            self._fns = [[(n, s.compiled(cfg.path, n)) for n in ladder]
+                         for s in sessions]
         else:
-            self._fns = [s.compiled(cfg.path, cfg.backend) for s in sessions]
+            # float/qat run one plan-resolved graph; the ladder is trivial
+            # but the guard's retry/timeout protection still applies.
+            ladder = (cfg.path,)
+            self._fns = [[(cfg.path, s.compiled(cfg.path, cfg.backend))]
+                         for s in sessions]
+        if fault_injector is not None:
+            self._fns = [[(n, fault_injector.wrap_fn(fn, label=n))
+                          for n, fn in per_session]
+                         for per_session in self._fns]
+        self.guard = ExecutionGuard(ladder, cfg.resilience)
         self.states = StateStore(cfg.max_streams) if cfg.stateful else None
+        if cfg.stateful and fault_injector is not None:
+            self.states = fault_injector.wrap_state_store(self.states)
         self.metrics = MetricsSink()
         self._results: "queue.Queue" = queue.Queue(
             maxsize=cfg.max_results or 0)
@@ -172,7 +234,8 @@ class StreamServer:
         self._sched = WaveScheduler(
             cfg.batch, self._execute, one_per_stream=cfg.stateful,
             deadline_s=cfg.deadline_s, queue_depth=cfg.queue_depth,
-            max_pending=cfg.max_pending)
+            max_pending=cfg.max_pending, overload=cfg.overload,
+            on_shed=self._shed)
 
     # -- client surface -----------------------------------------------------
 
@@ -180,9 +243,35 @@ class StreamServer:
                window: Union[np.ndarray, "jnp.ndarray"]) -> int:
         """Enqueue one (T, M) float window for ``stream_id``; returns the
         window's per-stream sequence number.  Blocks under backpressure
-        (``max_pending``).  All windows of a server must share one shape
-        (the jitted datapath is compiled for it)."""
-        w = np.asarray(window, np.float32)
+        (``max_pending``); with a reject-mode ``OverloadPolicy`` it raises
+        ``ServerOverloaded`` instead of blocking when the server is
+        saturated.  All windows of a server must share one shape (the
+        jitted datapath is compiled for it).
+
+        Inputs are validated HERE, per call: a malformed window (wrong
+        rank, wrong feature width, non-float-convertible dtype, NaN/Inf)
+        raises ``ValueError`` to this caller only — it never reaches the
+        compute thread, where it would poison a whole wave of other
+        clients' windows."""
+        try:
+            w = np.asarray(window, dtype=np.float32)
+        except (TypeError, ValueError) as e:
+            raise ValueError(
+                f"window is not convertible to a float32 array: {e}"
+            ) from None
+        if w.ndim != 2:
+            raise ValueError(
+                f"window must be a (T, M) array, got shape {w.shape}")
+        m = self._sessions[0].model.input_size
+        if w.shape[0] < 1 or w.shape[1] != m:
+            raise ValueError(
+                f"window shape {w.shape} does not match the model's "
+                f"(T>=1, input_size={m})")
+        if not np.isfinite(w).all():
+            raise ValueError(
+                "window contains NaN/Inf; the int datapath would quantise "
+                "them to arbitrary codes and corrupt the stream's carry — "
+                "rejected at submit")
         with self._seq_lock:
             if self._window_shape is None:
                 self._window_shape = w.shape
@@ -272,13 +361,18 @@ class StreamServer:
             # put and erase a reborn stream's carry (or miss a stale one).
             self.states.pop(stream_id)
 
-    def close(self, abandon: bool = False) -> None:
+    def close(self, abandon: bool = False,
+              timeout: float = 30.0) -> List[str]:
         """Stop the server.  Default: drain submitted windows first;
         ``abandon=True`` discards pending work immediately.  A drain that
         cannot complete (a ``max_results``-bounded queue wedged by a
-        consumer that stopped polling) escalates to abandon after a
-        timeout instead of leaking the worker threads."""
-        self._sched.close(abandon=abandon)
+        consumer that stopped polling) escalates to abandon after
+        ``timeout`` instead of leaking the worker threads.  Returns the
+        names of any threads that survived the escalated join (empty =
+        clean shutdown; also visible in ``health()["leaked_threads"]``)."""
+        leaked = self._sched.close(abandon=abandon, timeout=timeout)
+        self.guard.close()
+        return leaked
 
     def __enter__(self) -> "StreamServer":
         return self
@@ -303,6 +397,28 @@ class StreamServer:
         s["stateful"] = self.config.stateful
         s["sessions"] = len(self._sessions)
         s["state"] = self.states.stats() if self.states is not None else None
+        g = self.guard.stats()
+        sched = self._sched.stats()
+        counters = self.metrics.counters()
+        s["faults"] = {
+            "retries": g["retries"],
+            "timeouts": g["timeouts"],
+            "wave_failures": g["wave_failures"],
+            "degradations": g["degradations"],
+            "promotions": g["promotions"],
+            "probes": g["probes"],
+            "backend": g["backend"],
+            "degraded": g["level"] > 0,
+            "sheds": sched["sheds"],
+            "rejections": sched["rejections"],
+            "recoveries": sched["recoveries"],
+            "deadline_miss_rate": sched["deadline_miss_rate"],
+            "state_resets": counters.get("state_resets", 0),
+            "stream_errors": counters.get("stream_errors", 0),
+            "injected": (self.fault_injector.stats()
+                         if self.fault_injector is not None else None),
+        }
+        s["health"] = self.health()
         if s["waves"]:
             sess = self._sessions[0]
             occupancy = max(1, round(s["mean_occupancy"]))
@@ -313,63 +429,161 @@ class StreamServer:
             s["gops_per_watt"] = rep["energy"]["gops_per_watt"]
         return s
 
+    def health(self) -> Dict:
+        """Live health snapshot — cheap enough for a readiness probe.
+
+        ``status``: ``"failed"`` (an unrecovered compute-thread error is
+        pending re-raise), ``"overloaded"`` (pending queue saturated),
+        ``"degraded"`` (serving below the preferred engine), else
+        ``"ok"``.  Plus the current engine and ladder, queue depths, the
+        rolling deadline-miss rate, live stream count, and any leaked
+        worker threads from the last ``close``.  Schema documented in
+        docs/SERVING.md §Reliability."""
+        g = self.guard.stats()
+        sched = self._sched.stats()
+        if sched["dead"]:
+            status = "failed"
+        elif sched["pending"] >= sched["max_pending"]:
+            status = "overloaded"
+        elif g["level"] > 0:
+            status = "degraded"
+        else:
+            status = "ok"
+        return {
+            "status": status,
+            "backend": g["backend"],
+            "ladder": g["ladder"],
+            "degraded": g["level"] > 0,
+            "pending": sched["pending"],
+            "max_pending": sched["max_pending"],
+            "results_waiting": self._results.qsize(),
+            "deadline_miss_rate": sched["deadline_miss_rate"],
+            "live_streams": (len(self.states)
+                             if self.states is not None else None),
+            "leaked_threads": list(self._sched.leaked_threads),
+        }
+
     # -- compute thread -----------------------------------------------------
 
     def _execute(self, wave: Wave) -> None:
-        """Gather carries -> device datapath -> scatter carries -> emit.
-        Runs on the scheduler's compute thread, waves strictly in order —
-        which is what makes the gather/scatter of consecutive windows of
-        one stream consistent."""
-        fn = self._fns[self._rr % len(self._fns)]
+        """Gather carries -> GUARDED device datapath -> scatter carries ->
+        emit.  Runs on the scheduler's compute thread, waves strictly in
+        order — which is what makes the gather/scatter of consecutive
+        windows of one stream consistent.
+
+        The guard absorbs engine failures (retry, backoff, degradation
+        down the bit-identical ladder); only a wave that fails on EVERY
+        engine is converted into per-stream error results — the compute
+        thread survives either way."""
+        fns = self._fns[self._rr % len(self._fns)]
         self._rr += 1
         t0 = time.perf_counter()
         x = jnp.asarray(wave.x)
         if self.config.stateful:
-            y, new_state = fn(x, self._gather(wave))
+            gathered, reset = self._gather(wave)
+            outcome = self.guard.run(fns, x, gathered)
+        else:
+            reset = [False] * len(wave.slots)
+            outcome = self.guard.run(fns, x)
+        if not outcome.ok:
+            self._fail_wave(wave, outcome, t0)
+            return
+        if self.config.stateful:
+            y, new_state = outcome.value
             y = np.asarray(y)
             evicted = self._scatter(wave, new_state)
             self._retire(wave)
             self._reconcile_evictions(evicted)
         else:
-            y = np.asarray(fn(x))
+            y = np.asarray(outcome.value)
+        n_reset = sum(reset)
+        if n_reset:
+            self.metrics.count("state_resets", n_reset)
         t1 = time.perf_counter()
         self.metrics.record_wave(WaveRecord(
             t_done=t1, compute_s=t1 - t0, latency_s=t1 - wave.t_oldest,
             occupancy=wave.occupancy, batch=self.config.batch,
             deadline_flush=wave.deadline_flush))
         for i, slot in enumerate(wave.slots):
-            r = StreamResult(slot.stream_id, slot.seq, y[i])
-            # With max_results set this blocks, stalling the compute thread
-            # and — through the wave queue and pending bounds — eventually
-            # submit(): full backpressure to a stalled consumer.  Give up
-            # on abandon so close(abandon=True) cannot hang on a full
-            # results queue.
-            while True:
-                try:
-                    self._results.put(r, timeout=0.1)
-                    break
-                except queue.Full:
-                    if self._sched.stopped:
-                        return
+            self._emit(StreamResult(slot.stream_id, slot.seq, y[i],
+                                    state_reset=reset[i],
+                                    backend=outcome.backend))
+
+    def _fail_wave(self, wave: Wave, outcome, t0: float) -> None:
+        """Every ladder engine failed this wave: isolate the damage to the
+        wave's own streams.  Their carries are dropped (a window was lost,
+        so continuing from the pre-wave carry would be a silent gap — the
+        next window restarts from the reset state and is FLAGGED
+        ``state_reset``), each slot gets a structured error result, and
+        the compute thread moves on."""
+        err = f"compute_failed: {outcome.error}"
+        if self.config.stateful:
+            for slot in wave.slots:
+                self.states.pop(slot.stream_id)
+            self._retire(wave)
+        self.metrics.count("stream_errors", wave.occupancy)
+        t1 = time.perf_counter()
+        self.metrics.record_wave(WaveRecord(
+            t_done=t1, compute_s=t1 - t0, latency_s=t1 - wave.t_oldest,
+            occupancy=wave.occupancy, batch=self.config.batch,
+            deadline_flush=wave.deadline_flush))
+        for slot in wave.slots:
+            self._emit(StreamResult(slot.stream_id, slot.seq, None,
+                                    error=err))
+
+    def _shed(self, slot: Slot) -> None:
+        """Scheduler shed callback (assembler thread): the window was
+        dropped uncomputed.  On a stateful server the stream's carry is
+        dropped too — its recurrence now has a hole, and a silently wrong
+        continuation is worse than a flagged reset — so the next window
+        restarts from zero with ``state_reset=True``."""
+        if self.config.stateful:
+            with self._seq_lock:
+                self.states.pop(slot.stream_id)
+            self._retire_slot(slot.stream_id)
+        self.metrics.count("sheds")
+        self._emit(StreamResult(slot.stream_id, slot.seq, None,
+                                error="shed"))
+
+    def _emit(self, r: StreamResult) -> None:
+        """Deliver one result.  With max_results set this blocks, stalling
+        the compute thread and — through the wave queue and pending bounds
+        — eventually submit(): full backpressure to a stalled consumer.
+        Give up on abandon so close(abandon=True) cannot hang on a full
+        results queue."""
+        while True:
+            try:
+                self._results.put(r, timeout=0.1)
+                return
+            except queue.Full:
+                if self._sched.stopped:
+                    return
 
     def _gather(self, wave: Wave):
         """Per-layer (h, c) batch arrays for the wave: stored carries for
         known streams, the zero reset state for new/evicted streams and
-        padding rows."""
+        padding rows.  Also returns per-slot ``state_reset`` flags: True
+        when a stream WITH HISTORY (seq > 0) found no carry — it was
+        evicted, lost, or dropped by a failed wave, and its result must
+        say so instead of silently continuing from zeros."""
         model = self._sessions[0].model
         nl, hidden = model.num_layers, model.hidden_size
         hs = [np.zeros((self.config.batch, hidden), np.int32)
               for _ in range(nl)]
         cs = [np.zeros((self.config.batch, hidden), np.int32)
               for _ in range(nl)]
+        reset = [False] * len(wave.slots)
         for i, slot in enumerate(wave.slots):
             st = self.states.get(slot.stream_id)
             if st is not None:
                 for li, (h, c) in enumerate(st):
                     hs[li][i] = h
                     cs[li][i] = c
-        return tuple((jnp.asarray(hs[li]), jnp.asarray(cs[li]))
-                     for li in range(nl))
+            elif slot.seq > 0:
+                reset[i] = True
+        state = tuple((jnp.asarray(hs[li]), jnp.asarray(cs[li]))
+                      for li in range(nl))
+        return state, reset
 
     def _scatter(self, wave: Wave, new_state) -> set:
         """Store each real slot's updated carry; returns the ids evicted by
@@ -426,13 +640,22 @@ class StreamServer:
         by the streams currently inside the pipeline."""
         with self._seq_lock:
             for slot in wave.slots:
-                sid = slot.stream_id
-                left = self._outstanding.get(sid, 1) - 1
-                if left > 0:
-                    self._outstanding[sid] = left
-                else:
-                    self._outstanding.pop(sid, None)
-                    self._ended.pop(sid, None)
+                self._retire_slot_locked(slot.stream_id)
+
+    def _retire_slot(self, sid: Hashable) -> None:
+        """One window left the pipeline outside a wave (it was shed)."""
+        with self._seq_lock:
+            self._retire_slot_locked(sid)
+
+    def _retire_slot_locked(self, sid: Hashable) -> None:
+        """Decrement a stream's in-flight count; prune its bookkeeping at
+        zero.  Caller holds ``_seq_lock``."""
+        left = self._outstanding.get(sid, 1) - 1
+        if left > 0:
+            self._outstanding[sid] = left
+        else:
+            self._outstanding.pop(sid, None)
+            self._ended.pop(sid, None)
 
 
 def serve_windows(session, stream: Iterable, batch: int = 256,

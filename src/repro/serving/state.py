@@ -5,10 +5,13 @@ int32 code vectors after the stream's last window (``core.qlstm.IntState``,
 one batch row).  The store is a bounded LRU map: the paper's deployment
 target is an embedded device with fixed state memory, and the ROADMAP
 scenario is "millions of users" — so the store must evict, not grow.  An
-evicted stream silently restarts from the reset state (all-zero carry) on
-its next window, exactly as if it were a new stream; the eviction counter
-in :meth:`StateStore.stats` is the signal to raise ``max_streams`` when
-that matters.
+evicted stream restarts from the reset state (all-zero carry) on its next
+window, exactly as if it were a new stream — and since PR 6 that restart
+is REPORTED, not silent: the window computed from the reset carry comes
+back with ``StreamResult.state_reset=True`` and bumps the
+``state_resets`` counter in the metrics.  The eviction counter in
+:meth:`StateStore.stats` is the capacity-planning signal to raise
+``max_streams`` when resets matter.
 
 Thread-safety: all methods take the internal lock — the store is shared
 between the scheduler's compute thread (gather/scatter) and client threads
