@@ -3,9 +3,9 @@ headline (32 873 samples/s at 11.89 GOP/s/W on the XC7S15).
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
       [--stateful-backend ref,xla,pallas] [--fault-rate F] [--chaos]
-      [out.json]
+      [--replicas 1,2,4] [out.json]
 
-Two scenarios through `repro.serving`:
+Three scenario families through `repro.serving`:
 
   * ``stateless`` — the ``Accelerator.serve`` wave path (the paper's
     single-stream real-time deployment, batched).
@@ -18,6 +18,15 @@ Two scenarios through `repro.serving`:
     ``stateful_backend`` (the fused pallas kernel — off-TPU it runs
     interpret mode, so CI's ``--smoke`` measures the pallas-interpret
     point and the numbers track the trajectory, not the FPGA's).
+
+  * ``cluster[rN]`` (``--replicas`` comma list) — the same multiplexed
+    load through ``repro.build_cluster``: N device-pinned replica servers
+    behind the consistent-hash front door, schedulers running in
+    parallel.  The artifact records the cluster-AGGREGATE samples/s (over
+    the common wall), the per-replica breakdown (each replica's own
+    p50/p95/p99), and the ring block.  On CPU, scaling needs
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax
+    initialises (how CI runs the ``--replicas 1,2`` smoke).
 
 Chaos axes (the PR-6 reliability layer, ``repro.serving.faults``):
 ``--fault-rate F`` runs the stateful scenarios under a seeded
@@ -48,7 +57,11 @@ PAPER_GOPS_PER_WATT = 11.89       # Table 4
 # (was one "stateful" key with the implicit plan engine).
 # 3: scenario summaries carry the "faults"/"health" reliability blocks and
 # the payload records the chaos axes under "chaos".
-SCHEMA_VERSION = 3
+# 4: --replicas adds "cluster[rN]" scenarios (ClusterServer over N
+# device-pinned replicas): aggregate samples/s over the common wall plus
+# "samples_per_s_sum", the per-replica metrics breakdown under "replicas"
+# (each with its own p99), and the "ring" routing block.
+SCHEMA_VERSION = 4
 
 STATEFUL_BACKENDS = ("ref", "xla", "pallas")
 
@@ -120,6 +133,33 @@ def _scenario_stateful(sess, n_streams, windows_per_stream, batch,
     return summary
 
 
+def _scenario_cluster(sess, n_replicas, n_streams, windows_per_stream,
+                      batch):
+    """N device-pinned replica servers behind the consistent-hash front
+    door (``repro.build_cluster``): each stream sticks to one replica, the
+    replicas' schedulers run in parallel, and the summary reports the
+    cluster-aggregate samples/s with the per-replica breakdown.  On CI the
+    CPU "devices" come from XLA_FLAGS=--xla_force_host_platform_device_
+    count, so the scaling trend is the artifact, not absolute numbers."""
+    import numpy as np
+    import repro
+    rng = np.random.default_rng(2)
+    model = sess.model
+    xs = rng.uniform(0, 1, (n_streams, windows_per_stream, model.seq_len,
+                            model.input_size)).astype(np.float32)
+    with repro.build_cluster(sess, n_replicas, batch=batch, deadline_s=0.05,
+                             max_streams=max(16, n_streams)) as cluster:
+        cluster.warmup(xs[0, 0])            # compile every replica's
+        for w in range(windows_per_stream):  # datapath outside the clock
+            for s in range(n_streams):
+                cluster.submit(f"s{s}", xs[s, w])
+        cluster.drain()
+        summary = cluster.metrics_summary()
+    summary["backend"] = f"cluster[{n_replicas}x" \
+                         f"{sess.plan['stateful_backend']}]"
+    return summary
+
+
 def _row(name, summary):
     return (f"serving_{name}", summary["latency_ms"]["p50"] * 1e3,
             round(summary["samples_per_s"], 1))
@@ -127,11 +167,11 @@ def _row(name, summary):
 
 def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
         stateful_backends=None, fault_rate: float = 0.0,
-        chaos: bool = False):
+        chaos: bool = False, replicas=None):
     """Measure the stateless scenario plus one stateful scenario per
-    requested engine (under the seeded chaos axes when requested); write
-    the JSON payload and return the CSV-ish rows the benchmark harness
-    prints."""
+    requested engine (under the seeded chaos axes when requested) and one
+    cluster scenario per requested replica count; write the JSON payload
+    and return the CSV-ish rows the benchmark harness prints."""
     import repro
     sess = repro.build().quantize()     # the paper's default configuration
     backends = tuple(stateful_backends) if stateful_backends \
@@ -149,6 +189,15 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
             scenarios[f"stateful[{b}]"] = _scenario_stateful(
                 sess, n_streams=8, windows_per_stream=4, batch=8, backend=b,
                 fault_rate=fault_rate, chaos=chaos)
+        for n in (replicas or ()):
+            # Enough streams that every replica still fills waves at the
+            # largest requested fan-out — the scaling trend needs the
+            # per-replica occupancy to survive the split (and enough
+            # compute per wave that the parallel schedulers have work to
+            # overlap on a multi-core runner).
+            scenarios[f"cluster[r{n}]"] = _scenario_cluster(
+                sess, n_replicas=n, n_streams=48, windows_per_stream=8,
+                batch=12)
     else:
         scenarios["stateless"] = _scenario_stateless(sess, n_windows=4096,
                                                      batch=256)
@@ -156,6 +205,10 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
             scenarios[f"stateful[{b}]"] = _scenario_stateful(
                 sess, n_streams=128, windows_per_stream=16, batch=64,
                 backend=b, fault_rate=fault_rate, chaos=chaos)
+        for n in (replicas or ()):
+            scenarios[f"cluster[r{n}]"] = _scenario_cluster(
+                sess, n_replicas=n, n_streams=128, windows_per_stream=16,
+                batch=32)
 
     payload = {
         "suite": "serving",
@@ -176,11 +229,12 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
 
 def main(argv):
     """CLI: ``[--smoke] [--stateful-backend ref,xla,pallas]
-    [--fault-rate F] [--chaos] [out.json]``."""
+    [--fault-rate F] [--chaos] [--replicas 1,2,4] [out.json]``."""
     smoke = "--smoke" in argv
     chaos = "--chaos" in argv
     stateful_backends = None
     fault_rate = 0.0
+    replicas = None
     paths = []
     it = iter(a for a in argv if a not in ("--smoke", "--chaos"))
     for a in it:
@@ -200,13 +254,23 @@ def main(argv):
             if not 0.0 <= fault_rate < 1.0:
                 raise SystemExit(
                     f"--fault-rate must be in [0, 1), got {fault_rate}")
+        elif a == "--replicas" or a.startswith("--replicas="):
+            val = a.split("=", 1)[1] if "=" in a else next(it, "")
+            try:
+                replicas = [int(n) for n in val.split(",") if n]
+            except ValueError:
+                raise SystemExit(
+                    f"--replicas needs a comma list of ints, got {val!r}")
+            if not replicas or any(n < 1 for n in replicas):
+                raise SystemExit(
+                    f"--replicas needs positive counts, got {val!r}")
         elif a.startswith("--"):
             raise SystemExit(f"unknown flag {a!r}")
         else:
             paths.append(a)
     rows = run(smoke=smoke, out_path=paths[0] if paths
                else "BENCH_serving.json", stateful_backends=stateful_backends,
-               fault_rate=fault_rate, chaos=chaos)
+               fault_rate=fault_rate, chaos=chaos, replicas=replicas)
     print("name,us_per_call,derived")
     for n, us, d in rows:
         print(f"{n},{us:.2f},{d}")

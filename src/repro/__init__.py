@@ -16,9 +16,9 @@ point (docs/API.md §Design-space exploration)::
     session = repro.explore.autotune(objective="gops_per_watt",
                                      constraints={"total_w": (None, 61.0)})
 """
-from repro.api import Accelerator, build  # noqa: F401
+from repro.api import Accelerator, build, build_cluster  # noqa: F401
 
-__version__ = "0.3.2"
+__version__ = "0.3.3"
 
 
 def __getattr__(name):

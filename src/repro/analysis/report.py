@@ -173,6 +173,16 @@ def serving_table(payload: Dict) -> str:
                 "state resets | stream errors | injected faults |",
                 "|---|---|---|---|---|---|---|---|---|---|---|---|"]
         out += fault_rows
+    replica_rows = _serving_replica_rows(payload)
+    if replica_rows:
+        out += ["", "Cluster breakdown (schema >= 4: one row per replica "
+                "of each `cluster[rN]` scenario; `aggregate samples/s` is "
+                "the cluster's merged rate over the common wall, per-"
+                "replica rates are each server's own):", "",
+                "| scenario | replica | samples/s | p50 ms | p99 ms | "
+                "waves | occupancy | streams |",
+                "|---|---|---|---|---|---|---|---|"]
+        out += replica_rows
     return "\n".join(out)
 
 
@@ -193,6 +203,28 @@ def _serving_fault_rows(payload: Dict) -> list:
             f"{f['retries']} | {f['wave_failures']} | {f['sheds']} | "
             f"{f['rejections']} | {f['degradations']} | {f['promotions']} | "
             f"{f['state_resets']} | {f['stream_errors']} | {n_inj} |")
+    return rows
+
+
+def _serving_replica_rows(payload: Dict) -> list:
+    """§Serving cluster rows — one per replica of each scenario carrying a
+    ``replicas`` breakdown (the ClusterServer scenarios of schema >= 4;
+    empty for single-server artifacts, keeping old JSONs renderable)."""
+    rows = []
+    for name, s in payload["scenarios"].items():
+        per = s.get("replicas")
+        if not per:
+            continue
+        for rname in sorted(per):
+            p = per[rname]
+            lat = p.get("latency_ms") or {}
+            live = (p.get("state") or {}).get("live_streams", "—")
+            occ = (f"{p['mean_occupancy']:.1f}/{p['batch']}"
+                   if p.get("waves") else "—")
+            rows.append(
+                f"| {name} | {rname} | {p['samples_per_s']:,.0f} | "
+                f"{lat.get('p50', 0):.2f} | {lat.get('p99', 0):.2f} | "
+                f"{p['waves']} | {occ} | {live} |")
     return rows
 
 

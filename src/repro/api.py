@@ -70,6 +70,26 @@ def build(model: Optional[QLSTMConfig] = None,
                        params=params, seed=seed)
 
 
+def build_cluster(session, n: int, *, devices=None, names=None, config=None,
+                  **overrides):
+    """A ready multi-replica serving cluster from one quantised session:
+    ``session.replicate(n)`` (per-device pinned copies) behind a
+    ``repro.serving.ClusterServer`` consistent-hash front door.
+
+    ``devices`` pins explicit placement (``launch.mesh.serving_devices``
+    semantics); ``names`` labels the replicas on the ring; ``config`` /
+    keyword overrides set ``ClusterConfig`` and fall through to the
+    per-replica ``ServingConfig`` (``batch=``, ``deadline_s=``, ...).
+    docs/SERVING.md §Scaling out is the deployment guide."""
+    # Lazy: the serving package (threaded scheduler) only loads when a
+    # cluster is actually built, same posture as the other serving entry
+    # points.
+    from repro.serving.cluster import ClusterServer
+
+    replicas = session.replicate(n, devices=devices)
+    return ClusterServer(replicas, config=config, names=names, **overrides)
+
+
 class Accelerator:
     """A built accelerator: params + resolved plan + dispatchable datapaths.
 
@@ -94,6 +114,9 @@ class Accelerator:
         self.qparams: Optional[Params] = None
         self.train_summary: Optional[Dict[str, Any]] = None
         self._jitted: Dict[Tuple[str, str], Any] = {}
+        # Set by replicate(): the jax.Device this session's params are
+        # committed to (None = uncommitted, jax's default placement).
+        self.device = None
 
     # -- training -----------------------------------------------------------
 
@@ -238,6 +261,34 @@ class Accelerator:
         return backends.degradation_ladder(self.model, self.accel,
                                            override=backend,
                                            stateful=stateful)
+
+    def replicate(self, n: int, devices=None) -> "list[Accelerator]":
+        """``n`` device-pinned replica sessions of this (quantised)
+        accelerator — the per-replica substrate of the serving cluster
+        (docs/SERVING.md §Scaling out).
+
+        Each replica shares this session's configuration and weights, with
+        its params AND integer codes committed to its own device
+        (``sharding.partition.pin_to_device``), so jit executes each
+        replica's datapath on that device and a stream's (h, c) carry
+        stays replica-local under ``ClusterServer`` routing.  Devices come
+        from ``launch.mesh.serving_devices``: round-robin over
+        ``jax.devices()`` by default (oversubscribing when there are fewer
+        than ``n`` — the CPU-test posture), or an explicit ``devices``
+        list for controlled placement.  The codes are pinned, NOT
+        re-quantised, so every replica is bit-identical to this session."""
+        from repro.launch.mesh import serving_devices
+        from repro.sharding.partition import pin_to_device
+
+        self._require_quantized()
+        out = []
+        for d in serving_devices(n, devices):
+            rep = Accelerator(self.model, self.accel,
+                              params=pin_to_device(self.params, d))
+            rep.qparams = pin_to_device(self.qparams, d)
+            rep.device = d
+            out.append(rep)
+        return out
 
     def _require_quantized(self):
         if self.qparams is None:

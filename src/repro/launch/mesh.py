@@ -46,3 +46,52 @@ def make_host_mesh(model_parallel: int = 1) -> Mesh:
     n = len(jax.devices())
     assert n % model_parallel == 0
     return _make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def serving_devices(n: int, devices=None, *, oversubscribe: bool = True):
+    """The device list for an ``n``-replica serving cluster.
+
+    ``devices`` pins an explicit list (must hold at least ``n``; the first
+    ``n`` are used — the caller controls placement).  With the default
+    ``devices=None`` the visible ``jax.devices()`` are dealt out
+    round-robin; when ``n`` exceeds the device count, ``oversubscribe``
+    (default, the CPU-test posture — also how the CI cluster smoke runs
+    before XLA_FLAGS forces extra host devices) reuses devices cyclically,
+    while ``oversubscribe=False`` raises — the production posture, where a
+    "replica" that silently shares a device is a capacity-planning bug.
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1 replicas, got {n}")
+    if devices is not None:
+        devices = list(devices)
+        if len(devices) < n:
+            raise ValueError(
+                f"need {n} devices for {n} replicas, got {len(devices)} "
+                f"explicit devices")
+        return devices[:n]
+    avail = jax.devices()
+    if len(avail) < n and not oversubscribe:
+        raise RuntimeError(
+            f"need {n} devices for {n} replicas, have {len(avail)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N for CPU "
+            "testing, or pass oversubscribe=True to share devices")
+    return [avail[i % len(avail)] for i in range(n)]
+
+
+def make_serving_mesh(n: int, devices=None, *,
+                      oversubscribe: bool = True) -> Mesh:
+    """1-D ``("replica",)`` mesh over the serving cluster's devices.
+
+    Each coordinate along the ``replica`` axis is one serving replica's
+    device (``serving_devices`` picks them); per-replica parameter
+    placement then falls out of ``sharding.partition.replica_shardings``.
+    Requires ``n`` DISTINCT devices — a jax mesh cannot repeat a device,
+    so the oversubscribed CPU-test posture skips the mesh and pins each
+    replica directly (``sharding.partition.pin_to_device``)."""
+    devs = serving_devices(n, devices, oversubscribe=oversubscribe)
+    if len(set(d.id for d in devs)) != len(devs):
+        raise RuntimeError(
+            f"make_serving_mesh needs {n} distinct devices (a mesh cannot "
+            "repeat one); oversubscribed replicas are pinned directly via "
+            "sharding.partition.pin_to_device instead")
+    return _make_mesh((n,), ("replica",), devices=devs)

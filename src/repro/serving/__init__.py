@@ -28,14 +28,22 @@ Public surface (docs/SERVING.md is the deployment guide):
   * :func:`serve_windows` — ordered stateless mapping; the engine behind
     the ``Accelerator.serve`` / ``WaveBatcher.for_accelerator`` compat
     wrappers.
+  * :class:`ClusterServer` / :class:`ClusterConfig` — N per-device
+    replica servers behind a consistent-hash front door
+    (``repro.serving.cluster``; docs/SERVING.md §Scaling out).
+  * :class:`HashRing` — the routing primitive itself
+    (``repro.serving.routing``), exposed for external load balancers
+    that want to compute the same stream -> replica mapping.
 """
 
+from repro.serving.cluster import ClusterConfig, ClusterServer   # noqa: F401
 from repro.serving.faults import (FaultConfig, FaultInjector,    # noqa: F401
                                   InjectedFault)
 from repro.serving.metrics import MetricsSink, WaveRecord        # noqa: F401
 from repro.serving.resilience import (ExecutionGuard,            # noqa: F401
                                       GuardOutcome, ResiliencePolicy,
                                       WaveTimeout)
+from repro.serving.routing import HashRing                       # noqa: F401
 from repro.serving.scheduler import (OverloadPolicy,             # noqa: F401
                                      ServerOverloaded, Wave,
                                      WaveScheduler)
@@ -44,9 +52,10 @@ from repro.serving.server import (ServingConfig, StreamResult,   # noqa: F401
 from repro.serving.state import StateStore, StreamState          # noqa: F401
 
 __all__ = [
-    "ExecutionGuard", "FaultConfig", "FaultInjector", "GuardOutcome",
-    "InjectedFault", "MetricsSink", "OverloadPolicy", "ResiliencePolicy",
-    "ServerOverloaded", "ServingConfig", "StateStore", "StreamResult",
-    "StreamServer", "StreamState", "Wave", "WaveRecord", "WaveScheduler",
-    "WaveTimeout", "serve_windows",
+    "ClusterConfig", "ClusterServer", "ExecutionGuard", "FaultConfig",
+    "FaultInjector", "GuardOutcome", "HashRing", "InjectedFault",
+    "MetricsSink", "OverloadPolicy", "ResiliencePolicy", "ServerOverloaded",
+    "ServingConfig", "StateStore", "StreamResult", "StreamServer",
+    "StreamState", "Wave", "WaveRecord", "WaveScheduler", "WaveTimeout",
+    "serve_windows",
 ]

@@ -102,6 +102,66 @@ class MetricsSink:
         with self._lock:
             return list(self._recent)
 
+    def _snapshot(self) -> Dict:
+        """One consistent copy of every internal accumulator (for
+        :meth:`merge` — taken under the lock, so a sink being merged while
+        its server still records stays self-consistent)."""
+        with self._lock:
+            return {
+                "recent": list(self._recent),
+                "window": self._recent.maxlen,
+                "t_first_submit": self._t_first_submit,
+                "t_last_done": self._t_last_done,
+                "n_waves": self._n_waves,
+                "n_samples": self._n_samples,
+                "n_deadline_flushes": self._n_deadline_flushes,
+                "n_padded_slots": self._n_padded_slots,
+                "compute_s_total": self._compute_s_total,
+                "counters": dict(self._counters),
+            }
+
+    @classmethod
+    def merge(cls, sinks: "List[MetricsSink]",
+              window: Optional[int] = None) -> "MetricsSink":
+        """Cluster aggregation: one sink summarising many replicas' sinks.
+
+        Lifetime counters (waves, samples, deadline flushes, padded slots,
+        named event counters) are SUMMED; the wall interval spans the
+        earliest first-submit to the latest last-done across all replicas,
+        so the merged ``samples_per_s`` is the cluster's aggregate
+        throughput over the common measurement window.  The rolling
+        percentile window is the union of the replicas' retained
+        :class:`WaveRecord` rows ordered by completion time and truncated
+        to ``window`` (default: the largest input window), so the merged
+        p50/p95/p99 describe *current* cluster-wide wave latency exactly
+        as a single server's sink would.  ``merge([])`` is the empty sink;
+        empty inputs contribute nothing."""
+        sinks = list(sinks)
+        if window is None:
+            window = max((s._recent.maxlen or 4096 for s in sinks),
+                         default=4096)
+        out = cls(window=window)
+        snaps = [s._snapshot() for s in sinks]
+        records = sorted((r for sn in snaps for r in sn["recent"]),
+                         key=lambda r: r.t_done)
+        out._recent.extend(records)          # deque keeps the most recent
+        firsts = [sn["t_first_submit"] for sn in snaps
+                  if sn["t_first_submit"] is not None]
+        lasts = [sn["t_last_done"] for sn in snaps
+                 if sn["t_last_done"] is not None]
+        out._t_first_submit = min(firsts) if firsts else None
+        out._t_last_done = max(lasts) if lasts else None
+        out._n_waves = sum(sn["n_waves"] for sn in snaps)
+        out._n_samples = sum(sn["n_samples"] for sn in snaps)
+        out._n_deadline_flushes = sum(sn["n_deadline_flushes"]
+                                      for sn in snaps)
+        out._n_padded_slots = sum(sn["n_padded_slots"] for sn in snaps)
+        out._compute_s_total = sum(sn["compute_s_total"] for sn in snaps)
+        for sn in snaps:
+            for k, v in sn["counters"].items():
+                out._counters[k] += v
+        return out
+
     def summary(self) -> Dict:
         """Reduce the records to the serving report's throughput/latency
         block (see the module and class docstrings for the latency

@@ -26,6 +26,18 @@ round-robin across them by the single strictly-ordered compute thread
 per-stream carries consistent).  State lives in a bounded LRU
 :class:`~repro.serving.state.StateStore` — an evicted or brand new stream
 starts from the all-zero reset carry.
+
+The round-robin is WAVE-level, not stream-level: with >= 2 sessions a
+stream's consecutive windows may execute on DIFFERENT sessions
+(``StreamResult.routed_replica`` records which, as the session index).
+That is correct today only because the carry lives host-side in the
+shared ``StateStore`` — every session reads the same store, so which
+session computed window *k* does not matter for window *k+1*.  The moment
+state becomes device-resident (ROADMAP item 1), or sessions sit on
+different devices whose transfers you care about, this assignment is the
+wrong one: use ``repro.serving.cluster.ClusterServer``, which pins every
+stream to exactly one replica by consistent hash so its carry stays
+replica-local (the routing invariant, pinned in ``tests/test_cluster.py``).
 """
 
 from __future__ import annotations
@@ -131,7 +143,15 @@ class StreamResult:
     although the stream had history (LRU eviction, injected state loss, or
     a failed wave dropped it) — the prediction is a valid LSTM output, it
     just lost the history; silent before, now reported.  ``backend`` names
-    the engine that computed the window (None for error rows)."""
+    the engine that computed the window (None for error rows).
+
+    ``routed_replica`` says WHERE the window ran: on a ``StreamServer``
+    it is the index of the session that executed the wave (None for shed
+    windows, which never executed anywhere) — with >= 2 sessions a
+    stream's windows may carry DIFFERENT indices, the wave-level
+    round-robin documented in the module docstring.  Through
+    ``ClusterServer`` it is the replica NAME, and the routing invariant
+    guarantees one stream always reports one replica."""
 
     stream_id: Hashable
     seq: int
@@ -139,6 +159,7 @@ class StreamResult:
     error: Optional[str] = None
     state_reset: bool = False
     backend: Optional[str] = None
+    routed_replica: Optional[Hashable] = None
 
     @property
     def ok(self) -> bool:
@@ -475,7 +496,8 @@ class StreamServer:
         down the bit-identical ladder); only a wave that fails on EVERY
         engine is converted into per-stream error results — the compute
         thread survives either way."""
-        fns = self._fns[self._rr % len(self._fns)]
+        sess_idx = self._rr % len(self._fns)
+        fns = self._fns[sess_idx]
         self._rr += 1
         t0 = time.perf_counter()
         x = jnp.asarray(wave.x)
@@ -486,7 +508,7 @@ class StreamServer:
             reset = [False] * len(wave.slots)
             outcome = self.guard.run(fns, x)
         if not outcome.ok:
-            self._fail_wave(wave, outcome, t0)
+            self._fail_wave(wave, outcome, t0, sess_idx)
             return
         if self.config.stateful:
             y, new_state = outcome.value
@@ -507,9 +529,11 @@ class StreamServer:
         for i, slot in enumerate(wave.slots):
             self._emit(StreamResult(slot.stream_id, slot.seq, y[i],
                                     state_reset=reset[i],
-                                    backend=outcome.backend))
+                                    backend=outcome.backend,
+                                    routed_replica=sess_idx))
 
-    def _fail_wave(self, wave: Wave, outcome, t0: float) -> None:
+    def _fail_wave(self, wave: Wave, outcome, t0: float,
+                   sess_idx: int) -> None:
         """Every ladder engine failed this wave: isolate the damage to the
         wave's own streams.  Their carries are dropped (a window was lost,
         so continuing from the pre-wave carry would be a silent gap — the
@@ -529,7 +553,7 @@ class StreamServer:
             deadline_flush=wave.deadline_flush))
         for slot in wave.slots:
             self._emit(StreamResult(slot.stream_id, slot.seq, None,
-                                    error=err))
+                                    error=err, routed_replica=sess_idx))
 
     def _shed(self, slot: Slot) -> None:
         """Scheduler shed callback (assembler thread): the window was

@@ -17,6 +17,7 @@ import contextvars
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # TP width of the production mesh (launch/mesh.py); used for static layout
@@ -131,6 +132,40 @@ def rules_context(mesh: Mesh, overrides=()):
         yield
     finally:
         _RULES.reset(token)
+
+
+# --- per-replica placement (serving cluster) --------------------------------
+
+
+def replica_shardings(mesh: Mesh) -> list:
+    """One fully-replicated ``NamedSharding`` per coordinate of a
+    ``("replica",)`` serving mesh (``launch.mesh.make_serving_mesh``).
+
+    Each returned sharding is ``P()`` over a single-device sub-mesh — i.e.
+    "this whole pytree lives on replica *i*'s device".  This is the
+    cluster tier's placement primitive: per-replica parameters are small
+    (the paper's model is KBs), so every replica holds a full copy pinned
+    to its own device rather than sharding one copy across the mesh."""
+    if "replica" not in mesh.axis_names:
+        raise ValueError(
+            f"expected a ('replica',) serving mesh, got axes "
+            f"{mesh.axis_names}")
+    out = []
+    for d in mesh.devices.flat:
+        sub = Mesh(np.asarray([d]), ("replica",))
+        out.append(NamedSharding(sub, P()))
+    return out
+
+
+def pin_to_device(tree, device):
+    """Commit every leaf of ``tree`` to ``device`` (a ``jax.Device`` or a
+    ``NamedSharding`` from :func:`replica_shardings`).
+
+    Committed inputs make jit follow them: a datapath whose parameters are
+    pinned to replica *i*'s device executes on that device, which is what
+    keeps a stream's (h, c) carry replica-local in the serving cluster
+    (uncommitted host arrays — the wave inputs — are free to follow)."""
+    return jax.device_put(tree, device)
 
 
 def constrain(x, *axes: Optional[str]):

@@ -517,6 +517,27 @@ def test_multi_session_round_robin(sess):
     assert srv.metrics_summary()["sessions"] == 2
 
 
+def test_multi_session_round_robin_is_wave_level(sess):
+    """The round-robin assigns WAVES, not streams: with 2 sessions and
+    batch=1, one stateful stream's consecutive windows execute on both
+    sessions (``routed_replica`` = the session index) — correct only
+    because the carry is host-side in the shared StateStore (the module-
+    docstring caveat; ``ClusterServer`` is the pinned-routing answer)."""
+    replica = repro.build(MODEL, params=sess.params, seed=0).quantize()
+    k = 4
+    xs = _windows(k, seed=23)
+    with StreamServer([sess, replica], batch=1, deadline_s=0.005) as srv:
+        for w in xs:
+            srv.submit("one", w)
+        results = srv.drain()
+    assert {r.routed_replica for r in results} == {0, 1}
+    # ...and the shared host-side carry keeps it bit-exact anyway.
+    full = np.asarray(sess.infer(
+        jnp.asarray(xs.reshape(1, k * MODEL.seq_len, 1)), path="int"))
+    last = max(results, key=lambda r: r.seq)
+    np.testing.assert_array_equal(last.y, full[0])
+
+
 def test_non_replica_sessions_rejected(sess):
     """Same config but different weights is NOT a replica set: round-robin
     would silently interleave bit-incompatible models."""
