@@ -2,8 +2,8 @@
 headline (32 873 samples/s at 11.89 GOP/s/W on the XC7S15).
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
-      [--stateful-backend ref,xla,pallas] [--fault-rate F] [--chaos]
-      [--replicas 1,2,4] [out.json]
+      [--stateful-backend ref,xla,pallas] [--state-residency host,device]
+      [--fault-rate F] [--chaos] [--replicas 1,2,4] [out.json]
 
 Three scenario families through `repro.serving`:
 
@@ -27,6 +27,17 @@ Three scenario families through `repro.serving`:
     p50/p95/p99), and the ring block.  On CPU, scaling needs
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax
     initialises (how CI runs the ``--replicas 1,2`` smoke).
+
+``--state-residency`` (comma list of ``auto`` | ``host`` | ``device``,
+default ``auto``) runs each stateful scenario once per requested carry
+placement: ``host`` ships every wave's (h, c) batch across the
+host/device boundary (the legacy ``StateStore``), ``device`` keeps the
+carries in the accelerator-resident slot table and ships only (B,)
+slot-id vectors (``ServingConfig.state_residency``; docs/SERVING.md
+§State residency).  Each scenario's summary carries the resolved
+``state_residency`` and the ``state_transfer`` byte counters — on the
+device point ``to_device_bytes == from_device_bytes == 0`` is the
+artifact's proof that the per-wave state traffic is gone.
 
 Chaos axes (the PR-6 reliability layer, ``repro.serving.faults``):
 ``--fault-rate F`` runs the stateful scenarios under a seeded
@@ -61,9 +72,15 @@ PAPER_GOPS_PER_WATT = 11.89       # Table 4
 # device-pinned replicas): aggregate samples/s over the common wall plus
 # "samples_per_s_sum", the per-replica metrics breakdown under "replicas"
 # (each with its own p99), and the "ring" routing block.
-SCHEMA_VERSION = 4
+# 5: --state-residency adds per-placement stateful points keyed
+# "stateful[<backend>@<residency>]" (the bare "stateful[<backend>]" key is
+# kept for the default auto run); stateful summaries carry the resolved
+# "state_residency" and the "state_transfer" per-wave byte counters
+# (to_device/from_device pinned at 0 on the device point).
+SCHEMA_VERSION = 5
 
 STATEFUL_BACKENDS = ("ref", "xla", "pallas")
+STATE_RESIDENCIES = ("auto", "host", "device")
 
 
 def _scenario_stateless(sess, n_windows, batch):
@@ -104,9 +121,11 @@ def _injector(fault_rate, chaos, seed=42):
 
 
 def _scenario_stateful(sess, n_streams, windows_per_stream, batch,
-                       backend=None, fault_rate=0.0, chaos=False):
+                       backend=None, fault_rate=0.0, chaos=False,
+                       residency="auto"):
     """Multiplexed named streams with cross-window carry on ``backend``
-    (None = the plan's ``stateful_backend``); ``fault_rate``/``chaos``
+    (None = the plan's ``stateful_backend``); ``residency`` places the
+    carries (``ServingConfig.state_residency``); ``fault_rate``/``chaos``
     run the scenario under the seeded FaultInjector."""
     import numpy as np
     rng = np.random.default_rng(1)
@@ -116,6 +135,7 @@ def _scenario_stateful(sess, n_streams, windows_per_stream, batch,
     from repro.serving import ResiliencePolicy, ServingConfig, StreamServer
     cfg = ServingConfig(batch=batch, deadline_s=0.05, backend=backend,
                         max_streams=max(16, n_streams),
+                        state_residency=residency,
                         resilience=ResiliencePolicy(
                             max_retries=3, backoff_base_s=0.0005))
     with StreamServer(sess, cfg,
@@ -167,11 +187,12 @@ def _row(name, summary):
 
 def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
         stateful_backends=None, fault_rate: float = 0.0,
-        chaos: bool = False, replicas=None):
+        chaos: bool = False, replicas=None, state_residencies=None):
     """Measure the stateless scenario plus one stateful scenario per
-    requested engine (under the seeded chaos axes when requested) and one
-    cluster scenario per requested replica count; write the JSON payload
-    and return the CSV-ish rows the benchmark harness prints."""
+    requested engine x state residency (under the seeded chaos axes when
+    requested) and one cluster scenario per requested replica count;
+    write the JSON payload and return the CSV-ish rows the benchmark
+    harness prints."""
     import repro
     sess = repro.build().quantize()     # the paper's default configuration
     backends = tuple(stateful_backends) if stateful_backends \
@@ -180,15 +201,27 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
         if b not in STATEFUL_BACKENDS:
             raise SystemExit(f"unknown stateful backend {b!r}; "
                              f"choose from {STATEFUL_BACKENDS}")
+    residencies = tuple(state_residencies) if state_residencies else ("auto",)
+    for r in residencies:
+        if r not in STATE_RESIDENCIES:
+            raise SystemExit(f"unknown state residency {r!r}; "
+                             f"choose from {STATE_RESIDENCIES}")
+
+    def _skey(b, r):
+        # The bare pre-v5 key for the default placement, an explicit
+        # "@<residency>" suffix for requested host-vs-device points.
+        return f"stateful[{b}]" if r == "auto" else f"stateful[{b}@{r}]"
 
     scenarios = {}
     if smoke:
         scenarios["stateless"] = _scenario_stateless(sess, n_windows=64,
                                                      batch=16)
         for b in backends:
-            scenarios[f"stateful[{b}]"] = _scenario_stateful(
-                sess, n_streams=8, windows_per_stream=4, batch=8, backend=b,
-                fault_rate=fault_rate, chaos=chaos)
+            for r in residencies:
+                scenarios[_skey(b, r)] = _scenario_stateful(
+                    sess, n_streams=8, windows_per_stream=4, batch=8,
+                    backend=b, fault_rate=fault_rate, chaos=chaos,
+                    residency=r)
         for n in (replicas or ()):
             # Enough streams that every replica still fills waves at the
             # largest requested fan-out — the scaling trend needs the
@@ -202,9 +235,11 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
         scenarios["stateless"] = _scenario_stateless(sess, n_windows=4096,
                                                      batch=256)
         for b in backends:
-            scenarios[f"stateful[{b}]"] = _scenario_stateful(
-                sess, n_streams=128, windows_per_stream=16, batch=64,
-                backend=b, fault_rate=fault_rate, chaos=chaos)
+            for r in residencies:
+                scenarios[_skey(b, r)] = _scenario_stateful(
+                    sess, n_streams=128, windows_per_stream=16, batch=64,
+                    backend=b, fault_rate=fault_rate, chaos=chaos,
+                    residency=r)
         for n in (replicas or ()):
             scenarios[f"cluster[r{n}]"] = _scenario_cluster(
                 sess, n_replicas=n, n_streams=128, windows_per_stream=16,
@@ -229,10 +264,12 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
 
 def main(argv):
     """CLI: ``[--smoke] [--stateful-backend ref,xla,pallas]
-    [--fault-rate F] [--chaos] [--replicas 1,2,4] [out.json]``."""
+    [--state-residency auto,host,device] [--fault-rate F] [--chaos]
+    [--replicas 1,2,4] [out.json]``."""
     smoke = "--smoke" in argv
     chaos = "--chaos" in argv
     stateful_backends = None
+    state_residencies = None
     fault_rate = 0.0
     replicas = None
     paths = []
@@ -245,6 +282,13 @@ def main(argv):
                 raise SystemExit(
                     "--stateful-backend needs a comma list of "
                     f"{','.join(STATEFUL_BACKENDS)}")
+        elif a == "--state-residency" or a.startswith("--state-residency="):
+            val = a.split("=", 1)[1] if "=" in a else next(it, "")
+            state_residencies = [r for r in val.split(",") if r]
+            if not state_residencies:
+                raise SystemExit(
+                    "--state-residency needs a comma list of "
+                    f"{','.join(STATE_RESIDENCIES)}")
         elif a == "--fault-rate" or a.startswith("--fault-rate="):
             val = a.split("=", 1)[1] if "=" in a else next(it, "")
             try:
@@ -270,7 +314,8 @@ def main(argv):
             paths.append(a)
     rows = run(smoke=smoke, out_path=paths[0] if paths
                else "BENCH_serving.json", stateful_backends=stateful_backends,
-               fault_rate=fault_rate, chaos=chaos, replicas=replicas)
+               fault_rate=fault_rate, chaos=chaos, replicas=replicas,
+               state_residencies=state_residencies)
     print("name,us_per_call,derived")
     for n, us, d in rows:
         print(f"{n},{us:.2f},{d}")

@@ -250,6 +250,57 @@ class Accelerator:
         self._jitted[key] = fn
         return fn
 
+    def init_state_table(self, max_slots: int) -> Array:
+        """The reset DEVICE-RESIDENT state table for
+        ``compiled_stateful_slots``: a zero ``(max_slots + 2, L, 2, H)``
+        int32 array (axis 2 is (h, c)), committed to this session's device
+        when the session is pinned (``replicate``).  Rows ``max_slots``
+        and ``max_slots + 1`` are the conventions of the slot kernel: the
+        always-zero RESET row fresh/evicted streams gather from, and the
+        write-only TRASH row retired/padding rows scatter to
+        (``kernels/qlstm_cell.qlstm_seq_slot_pallas``)."""
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        tbl = jnp.zeros((max_slots + 2, self.model.num_layers, 2,
+                         self.model.hidden_size), jnp.int32)
+        return jax.device_put(tbl, self.device) if self.device is not None \
+            else tbl
+
+    def compiled_stateful_slots(self, backend: Optional[str] = None):
+        """The cached jitted DEVICE-RESIDENT-state entry point: a callable
+        ``((B, T, M) float, table, gather_slots, scatter_slots) ->
+        ((B, P) float, new_table)`` where ``table`` is the persistent
+        per-stream carry table (``init_state_table``) and the slot vectors
+        are (B,) int32 table-row ids.  Per wave the host ships only the
+        float window batch and the two slot vectors — no (h, c) arrays
+        cross the host/device boundary, which is what
+        ``plan()['state_residency'] == 'device'`` buys the serving tier.
+        The fused pallas engine gathers/scatters inside the kernel;
+        ``ref``/``xla`` run the XLA-level adapter, so every rung of the
+        degradation ladder accepts the same arguments.  Bit-identical to
+        ``compiled_stateful`` fed the host-gathered carries."""
+        self._require_quantized()
+        bk = backends.select_stateful(self.model, self.accel,
+                                      override=backend)
+        key = ("int_stateful_slots", bk.name)
+        if key in self._jitted:
+            return self._jitted[key]
+        impl = bk.run_stateful_slots
+        if impl is None:
+            from repro.backends.common import run_slots_via_state
+            impl = lambda *a: run_slots_via_state(bk.run_stateful, *a)
+        qparams, model, accel = self.qparams, self.model, self.accel
+
+        def slot_path(x, table, gather_slots, scatter_slots):
+            x_int = fxp.quantize(x, model.fxp)
+            y_int, new_table = impl(qparams, x_int, model, accel, table,
+                                    gather_slots, scatter_slots)
+            return fxp.dequantize(y_int, model.fxp), new_table
+
+        fn = jax.jit(slot_path)
+        self._jitted[key] = fn
+        return fn
+
     def degradation_ladder(self, backend: Optional[str] = None,
                            stateful: bool = True) -> Tuple[str, ...]:
         """Ordered engine names the serving tier falls back through on

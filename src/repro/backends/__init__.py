@@ -38,6 +38,20 @@ All three engines implement it — the fused ``pallas`` kernel seeds its
 so stateful selection (``select_stateful``, following the plan's
 ``stateful_backend``) resolves exactly like the stateless path
 (docs/API.md §Backends documents the selection order).
+
+For DEVICE-RESIDENT serving state (``plan()['state_residency']``) an
+engine may additionally expose
+
+  run_stateful_slots(qparams, x_int, model, accel,
+                     table, gather_slots, scatter_slots)
+      -> (y_int, new_table)
+
+where ``table`` is the persistent ``(n_slots + 2, L, 2, H)`` int32 state
+table and the slot vectors are per-batch-row table-row ids (the contract
+of ``kernels/qlstm_cell.qlstm_seq_slot_pallas``).  The ``pallas`` engine
+gathers/scatters inside the fused kernel; ``ref`` and ``xla`` use the
+XLA-level adapter (``common.run_slots_via_state`` — still device-side,
+so degrading down the ladder never moves the carry back to the host).
 """
 
 from __future__ import annotations
@@ -67,6 +81,11 @@ class Backend:
     # (qparams, x_int, model, accel, state) -> (y_int, new_state); None when
     # the engine cannot start from a non-zero (h, c) carry.
     run_stateful: Optional[Callable] = None
+    # (qparams, x_int, model, accel, table, gather_slots, scatter_slots)
+    # -> (y_int, new_table): the device-resident state-table entry point
+    # (slot gather/scatter on the device; module docstring has the table
+    # layout).  None when the engine has no slot path.
+    run_stateful_slots: Optional[Callable] = None
 
 
 _REGISTRY: Dict[str, Backend] = {}

@@ -53,6 +53,33 @@ def run_layered(layer_fn: Callable, qparams, x_int: Array,
     return dense_head(h_t[-1], qparams, model)
 
 
+def run_slots_via_state(run_stateful: Callable, qparams, x_int: Array,
+                        model: QLSTMConfig, accel: AcceleratorConfig,
+                        table: Array, gather_slots: Array,
+                        scatter_slots: Array):
+    """Generic ``run_stateful_slots`` for engines without an in-kernel slot
+    path: gather the per-layer (h, c) batch from the state table, run the
+    engine's ``run_stateful``, scatter the new carry back — all in jnp, so
+    under jit the table never leaves the device even though the engine
+    itself only understands dense state.  This keeps every rung of the
+    serving degradation ladder device-resident: falling back from the
+    fused pallas kernel to ``xla``/``ref`` changes latency, never where
+    the state lives.
+
+    Same table contract as ``kernels/qlstm_cell.qlstm_seq_slot_pallas``
+    (rows ``n_slots``/``n_slots + 1`` are the ZERO/TRASH slots); returns
+    ``(y_int, new_table)``."""
+    nl = model.num_layers
+    state = tuple((jnp.take(table[:, li, 0, :], gather_slots, axis=0),
+                   jnp.take(table[:, li, 1, :], gather_slots, axis=0))
+                  for li in range(nl))
+    y_int, new_state = run_stateful(qparams, x_int, model, accel, state)
+    for li, (h, c) in enumerate(new_state):
+        table = table.at[scatter_slots, li, 0, :].set(h)
+        table = table.at[scatter_slots, li, 1, :].set(c)
+    return y_int, table
+
+
 def run_layered_stateful(layer_fn: Callable, qparams, x_int: Array,
                          model: QLSTMConfig, accel: AcceleratorConfig,
                          state):

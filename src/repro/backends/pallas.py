@@ -27,7 +27,8 @@ from repro.backends.common import dense_head, supports_fused
 from repro.core.accelerator import AcceleratorConfig, sync_accelerator
 from repro.core.qlstm import QLSTMConfig, check_int_state, init_int_state
 from repro.kernels.qlstm_cell import (qlstm_seq_multilayer_pallas,
-                                      qlstm_seq_pallas)
+                                      qlstm_seq_pallas,
+                                      qlstm_seq_slot_pallas)
 
 Array = jax.Array
 
@@ -80,6 +81,28 @@ def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
     return dense_head(out[-1].astype(jnp.int32), qparams, model), new_state
 
 
+def run_stateful_slots(qparams, x_int: Array, model: QLSTMConfig,
+                       accel: AcceleratorConfig, table: Array,
+                       gather_slots: Array, scatter_slots: Array):
+    """Whole model with DEVICE-RESIDENT stream state — (y_int, new_table).
+
+    The fused kernel gathers each batch row's per-layer carry from the
+    state table at t == 0 and scatters the final (h, c) back at t == T-1,
+    all inside one ``pallas_call`` — the host ships only integer inputs
+    and the two (B,) slot-id vectors (table layout:
+    ``kernels/qlstm_cell.qlstm_seq_slot_pallas``)."""
+    sd = model.fxp.storage_dtype
+    h_t = jnp.swapaxes(x_int, 0, 1).astype(sd)          # time-major (T, B, M)
+    layers = qparams["layers"]
+    out, new_table = qlstm_seq_slot_pallas(
+        h_t, gather_slots, scatter_slots, table,
+        tuple(p["w_x"].astype(sd) for p in layers),
+        tuple(p["w_h"].astype(sd) for p in layers),
+        tuple(p["b"] for p in layers),
+        **_kernel_args(model, accel))
+    return dense_head(out[-1].astype(jnp.int32), qparams, model), new_table
+
+
 def run(qparams, x_int: Array, model: QLSTMConfig,
         accel: AcceleratorConfig) -> Array:
     """Whole model, batch-major — the fused multi-layer kernel started
@@ -90,4 +113,5 @@ def run(qparams, x_int: Array, model: QLSTMConfig,
 
 
 BACKEND = register(Backend(name="pallas", run=run, supports=supports_fused,
-                           layer=layer, run_stateful=run_stateful))
+                           layer=layer, run_stateful=run_stateful,
+                           run_stateful_slots=run_stateful_slots))

@@ -6,11 +6,13 @@ bit-for-bit (`tests/test_api.py`, `tests/test_kernels.py`)."""
 
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.backends import Backend, register
 from repro.backends.common import (run_layered, run_layered_stateful,
-                                   supports_fused)
+                                   run_slots_via_state, supports_fused)
 from repro.core.accelerator import AcceleratorConfig
 from repro.core.qlstm import QLSTMConfig
 from repro.kernels import ref as _ref
@@ -54,5 +56,9 @@ def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
                                 state)
 
 
-BACKEND = register(Backend(name="ref", run=run, supports=supports_fused,
-                           layer=layer, run_stateful=run_stateful))
+BACKEND = register(Backend(
+    name="ref", run=run, supports=supports_fused, layer=layer,
+    run_stateful=run_stateful,
+    # Device-resident state via the XLA-level gather/scatter adapter — the
+    # oracle rung of the serving ladder keeps the carry on the device too.
+    run_stateful_slots=functools.partial(run_slots_via_state, run_stateful)))

@@ -9,11 +9,13 @@ configurations with hard activations it is bit-identical to the ``ref`` and
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 
 from repro.backends import Backend, register
+from repro.backends.common import run_slots_via_state
 from repro.core.accelerator import AcceleratorConfig
 from repro.core.qlstm import QLSTMConfig, forward_int, forward_int_stateful
 
@@ -45,5 +47,7 @@ def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
     return forward_int_stateful(qparams, x_int, model, state)
 
 
-BACKEND = register(Backend(name="xla", run=run, supports=supports,
-                           run_stateful=run_stateful))
+BACKEND = register(Backend(
+    name="xla", run=run, supports=supports, run_stateful=run_stateful,
+    # Device-resident state via the XLA-level gather/scatter adapter.
+    run_stateful_slots=functools.partial(run_slots_via_state, run_stateful)))

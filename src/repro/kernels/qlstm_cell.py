@@ -28,7 +28,7 @@ is seeded from the ``(h0, c0)`` inputs (all-zero for a fresh stream), and
 at t == T-1 it is written to the final-state outputs, so a window-by-window
 resumed run is bit-identical to one concatenated run.
 
-Two public entry points share one kernel builder:
+Three public entry points share one cell-step implementation:
 
   * :func:`qlstm_seq_pallas` — one layer, optionally resumed from a carried
     ``(h0, c0)`` and optionally returning the final state.
@@ -38,6 +38,20 @@ Two public entry points share one kernel builder:
     without ever round-tripping through HBM (the Python-level per-layer
     re-launch of ``backends.common.run_layered`` is exactly what this
     removes from the serving hot path).
+  * :func:`qlstm_seq_slot_pallas` — the multi-layer kernel with
+    DEVICE-RESIDENT stream state: instead of shipping ``(h0, c0)`` batch
+    arrays from the host, the call carries a persistent state TABLE of
+    shape ``(n_slots + 2, L, 2, H)`` plus two per-row int32 slot-id
+    vectors.  At t == 0 each batch row gathers its carry from
+    ``table[gather_slots[i]]``; at t == T-1 each row scatters its final
+    (h, c) into ``table[scatter_slots[i]]`` — all inside the kernel, so
+    the host ships only integer inputs and slot ids per wave.  Row
+    ``n_slots`` is the ZERO slot (always the reset carry, gathered by
+    fresh/reset streams, never written); row ``n_slots + 1`` is the TRASH
+    slot (the scatter target for padding/retired rows, never read).
+    Because every gather happens at t == 0 and every scatter at t == T-1,
+    a slot freed and reassigned within one wave is still read before it
+    is overwritten.
 
 Oracle: ``kernels/ref.py::qlstm_seq_ref`` (bit-exact, including the carry).
 """
@@ -58,27 +72,85 @@ from repro.core.fixed_point import FixedPointConfig, product_config
 Array = jax.Array
 
 
-def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
-                 hs_slope_shift: int, hs_bound: float,
-                 ht_min: float, ht_max: float, compute_unit: str,
-                 t_len: int, num_layers: int):
+def _cell_math(cfg: FixedPointConfig, hs_method: str, hs_slope_shift: int,
+               hs_bound: float, ht_min: float, ht_max: float):
+    """The shared integer arithmetic of every kernel variant: the S5
+    late-rounding requant plus the hard activations.  Built from the exact
+    oracle helpers (core/hard_act.py) so the kernels cannot drift from
+    ``kernels/ref.py``.  The 'step' method is the gather-free unrolled
+    cascade; HardTanh is the same pair of comparators the oracle clips
+    with."""
     prod = product_config(cfg, cfg)
     shift = prod.frac_bits - cfg.frac_bits          # 2a -> a
     half = 1 << (shift - 1)
     spec = hard_act.HardSigmoidStarSpec(cfg, hs_slope_shift, hs_bound)
     lo = cfg.int_min
     hi = cfg.int_max
-    # Shared integer spec (core/hard_act.py) — the kernel uses the exact
-    # oracle helpers so the two implementations cannot drift.  The 'step'
-    # method is the gather-free unrolled cascade; HardTanh is the same
-    # pair of comparators the oracle clips with.
-    hs = (hard_act.hs_star_int_step_unrolled if hs_method == "step"
-          else hard_act.hs_star_int_arithmetic)
+    hs_fn = (hard_act.hs_star_int_step_unrolled if hs_method == "step"
+             else hard_act.hs_star_int_arithmetic)
+    hs = lambda v: hs_fn(v, spec)
     ht = functools.partial(hard_act.hard_tanh_int, cfg=cfg,
                            min_val=ht_min, max_val=ht_max)
 
     def requant(v):  # round-half-up shift + saturate: the single S5 rounding
         return jnp.clip((v + half) >> shift, lo, hi)
+
+    return requant, hs, ht
+
+
+def _stack_step(x_t, wx, wh, b, h_s, c_s, *, hdim, compute_unit,
+                requant, hs, ht):
+    """One timestep through the whole fused layer stack: reads and updates
+    the per-layer (h, c) VMEM scratch refs in place and returns the final
+    layer's new hidden state.  Layer li's step-t output feeds layer li+1
+    at the same step, staying in VMEM/registers — no HBM round-trip
+    between layers."""
+    carrier = x_t.dtype
+    inp = x_t
+    for li in range(len(wh)):
+        h8 = h_s[li][...].astype(carrier)  # stored codes fit the carrier
+        if compute_unit == "mxu":
+            # int8 x int8 -> int32 systolic matmul (the DSP analogue)
+            acc = jax.lax.dot_general(
+                inp, wx[li][...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc += jax.lax.dot_general(
+                h8, wh[li][...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        else:
+            # VPU: broadcast multiply + reduce (the LUT-fabric analogue)
+            acc = jnp.sum(inp.astype(jnp.int32)[:, :, None]
+                          * wx[li][...].astype(jnp.int32)[None, :, :],
+                          axis=1)
+            acc += jnp.sum(h8.astype(jnp.int32)[:, :, None]
+                           * wh[li][...].astype(jnp.int32)[None, :, :],
+                           axis=1)
+        acc += b[li][...]                # bias at accumulator precision
+        pre = requant(acc)               # late rounding (S5)
+
+        i = hs(pre[:, :hdim])
+        f = hs(pre[:, hdim:2 * hdim])
+        g = ht(pre[:, 2 * hdim:3 * hdim])
+        o = hs(pre[:, 3 * hdim:])
+
+        c = c_s[li][...]
+        wide = f * c + i * g             # both products wide, add, ...
+        c_new = requant(wide)            # ... round once
+        tanh_c = ht(c_new)
+        h_new = requant(o * tanh_c)
+
+        h_s[li][...] = h_new
+        c_s[li][...] = c_new
+        inp = h_new.astype(carrier)
+    return inp
+
+
+def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
+                 hs_slope_shift: int, hs_bound: float,
+                 ht_min: float, ht_max: float, compute_unit: str,
+                 t_len: int, num_layers: int):
+    requant, hs, ht = _cell_math(cfg, hs_method, hs_slope_shift, hs_bound,
+                                 ht_min, ht_max)
 
     def kernel(*refs):
         # Ref layout (L = num_layers): x, L*w_x, L*w_h, L*b, L*h0, L*c0 |
@@ -106,55 +178,68 @@ def _make_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
                 h_s[li][...] = h0[li][...]
                 c_s[li][...] = c0[li][...]
 
-        x_t = x_ref[0]                       # (bb, M) int carrier
-        carrier = x_t.dtype
-        inp = x_t
-        for li in range(n):
-            h8 = h_s[li][...].astype(carrier)  # stored codes fit the carrier
-            if compute_unit == "mxu":
-                # int8 x int8 -> int32 systolic matmul (the DSP analogue)
-                acc = jax.lax.dot_general(
-                    inp, wx[li][...], (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32)
-                acc += jax.lax.dot_general(
-                    h8, wh[li][...], (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32)
-            else:
-                # VPU: broadcast multiply + reduce (the LUT-fabric analogue)
-                acc = jnp.sum(inp.astype(jnp.int32)[:, :, None]
-                              * wx[li][...].astype(jnp.int32)[None, :, :],
-                              axis=1)
-                acc += jnp.sum(h8.astype(jnp.int32)[:, :, None]
-                               * wh[li][...].astype(jnp.int32)[None, :, :],
-                               axis=1)
-            acc += b[li][...]                # bias at accumulator precision
-            pre = requant(acc)               # late rounding (S5)
-
-            i = hs(pre[:, :hdim], spec)
-            f = hs(pre[:, hdim:2 * hdim], spec)
-            g = ht(pre[:, 2 * hdim:3 * hdim])
-            o = hs(pre[:, 3 * hdim:], spec)
-
-            c = c_s[li][...]
-            wide = f * c + i * g             # both products wide, add, ...
-            c_new = requant(wide)            # ... round once
-            tanh_c = ht(c_new)
-            h_new = requant(o * tanh_c)
-
-            h_s[li][...] = h_new
-            c_s[li][...] = c_new
-            # Layer-to-layer stream: layer li's step-t hidden state feeds
-            # layer li+1 at the same step, staying in VMEM/registers — no
-            # HBM round-trip between layers.
-            inp = h_new.astype(carrier)
-
-        out_ref[0] = inp.astype(out_ref.dtype)   # final layer's h_t
+        out_ref[0] = _stack_step(
+            x_ref[0], wx, wh, b, h_s, c_s, hdim=hdim,
+            compute_unit=compute_unit, requant=requant, hs=hs,
+            ht=ht).astype(out_ref.dtype)         # final layer's h_t
 
         @pl.when(t == t_len - 1)
         def _():
             for li in range(n):
                 h_fin[li][...] = h_s[li][...]
                 c_fin[li][...] = c_s[li][...]
+
+    return kernel
+
+
+def _make_slot_kernel(cfg: FixedPointConfig, hdim: int, hs_method: str,
+                      hs_slope_shift: int, hs_bound: float,
+                      ht_min: float, ht_max: float, compute_unit: str,
+                      t_len: int, num_layers: int):
+    requant, hs, ht = _cell_math(cfg, hs_method, hs_slope_shift, hs_bound,
+                                 ht_min, ht_max)
+
+    def kernel(*refs):
+        # Ref layout (L = num_layers): x, gather_slots, scatter_slots,
+        # table | L*w_x, L*w_h, L*b | out, table_out | L*h_s, L*c_s.
+        n = num_layers
+        x_ref, g_ref, s_ref, tbl_ref = refs[:4]
+        wx = refs[4:4 + n]
+        wh = refs[4 + n:4 + 2 * n]
+        b = refs[4 + 2 * n:4 + 3 * n]
+        out_ref = refs[4 + 3 * n]
+        tbl_out = refs[5 + 3 * n]
+        h_s = refs[6 + 3 * n:6 + 4 * n]
+        c_s = refs[6 + 4 * n:6 + 5 * n]
+        t = pl.program_id(0)
+
+        @pl.when(t == 0)
+        def _():
+            # In-kernel GATHER: row i's carry comes from table row
+            # gather_slots[i] — the ZERO row for fresh/reset streams.
+            g = g_ref[0]
+            tbl = tbl_ref[...]
+            for li in range(n):
+                h_s[li][...] = jnp.take(tbl[:, li, 0, :], g, axis=0)
+                c_s[li][...] = jnp.take(tbl[:, li, 1, :], g, axis=0)
+
+        out_ref[0] = _stack_step(
+            x_ref[0], wx, wh, b, h_s, c_s, hdim=hdim,
+            compute_unit=compute_unit, requant=requant, hs=hs,
+            ht=ht).astype(out_ref.dtype)
+
+        @pl.when(t == t_len - 1)
+        def _():
+            # In-kernel SCATTER: row i's final (h, c) lands in table row
+            # scatter_slots[i] — the TRASH row for retired/padding rows.
+            # Duplicate targets only ever occur at TRASH (the allocator
+            # hands out unique live slots), whose content is never read.
+            s = s_ref[0]
+            tbl = tbl_ref[...]
+            for li in range(n):
+                tbl = tbl.at[s, li, 0, :].set(h_s[li][...])
+                tbl = tbl.at[s, li, 1, :].set(c_s[li][...])
+            tbl_out[...] = tbl
 
     return kernel
 
@@ -307,3 +392,88 @@ def qlstm_seq_multilayer_pallas(x_int: Array, w_xs: Tuple[Array, ...],
         compute_unit=compute_unit, batch_block=batch_block,
         interpret=interpret)
     return out, tuple(zip(h_fin, c_fin))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "hs_method", "hs_slope_shift", "hs_bound",
+                     "ht_min", "ht_max", "compute_unit", "interpret"))
+def qlstm_seq_slot_pallas(x_int: Array, gather_slots: Array,
+                          scatter_slots: Array, table: Array,
+                          w_xs: Tuple[Array, ...], w_hs: Tuple[Array, ...],
+                          b_wides: Tuple[Array, ...], *,
+                          cfg: FixedPointConfig,
+                          hs_method: str = "arithmetic",
+                          hs_slope_shift: int = 3, hs_bound: float = 3.0,
+                          ht_min: float = -1.0, ht_max: float = 1.0,
+                          compute_unit: str = "mxu",
+                          interpret: bool = True):
+    """The fused multi-layer stack with DEVICE-RESIDENT stream state.
+
+    x_int: (T, B, M) integer codes; ``table``: the persistent
+    ``(n_slots + 2, L, 2, H)`` int32 state table (axis 2 is (h, c); row
+    ``n_slots`` is the always-zero RESET slot, row ``n_slots + 1`` the
+    write-only TRASH slot); ``gather_slots``/``scatter_slots``: (B,) int32
+    table-row ids, one per batch row.  Weight tuples as in
+    :func:`qlstm_seq_multilayer_pallas`.
+
+    At t == 0 the kernel gathers row i's per-layer carry from
+    ``table[gather_slots[i]]`` into VMEM scratch; at t == T-1 it scatters
+    the final per-layer (h, c) into ``table[scatter_slots[i]]`` and emits
+    the updated table.  The host therefore ships only the integer inputs
+    and two (B,) slot vectors per wave — no (h, c) batch arrays cross the
+    host/device boundary on the hot path.  Because all gathers precede all
+    scatters inside one call, a slot evicted and reassigned within the
+    same wave still sources its old owner's carry correctly.
+
+    The whole batch runs as ONE grid block (grid is over time only): every
+    row scatters into one shared table, so the grid must not parallelise
+    over batch.  Returns ``(out, new_table)``: the final layer's (T, B, H)
+    hidden codes and the updated state table.  Bit-exact with gathering
+    ``(h0, c0)`` on the host and calling
+    :func:`qlstm_seq_multilayer_pallas` with the same carries.
+    """
+    n = len(w_hs)
+    if not (len(w_xs) == len(b_wides) == n):
+        raise ValueError(
+            f"per-layer tuples disagree on the layer count: "
+            f"w_xs={len(w_xs)}, w_hs={n}, b_wides={len(b_wides)}")
+    t_len, bsz, m = x_int.shape
+    hdim = w_hs[0].shape[0]
+    if table.ndim != 4 or table.shape[0] < 3 or table.shape[1:] != (n, 2,
+                                                                    hdim):
+        raise ValueError(
+            f"state table must be (n_slots + 2, {n}, 2, {hdim}) with "
+            f"n_slots >= 1, got {table.shape}")
+    sd = x_int.dtype
+    gather_slots = gather_slots.reshape(1, bsz).astype(jnp.int32)
+    scatter_slots = scatter_slots.reshape(1, bsz).astype(jnp.int32)
+    table = table.astype(jnp.int32)
+
+    kernel = _make_slot_kernel(cfg, hdim, hs_method, hs_slope_shift,
+                               hs_bound, ht_min, ht_max, compute_unit,
+                               t_len, n)
+    res2 = lambda t: (0, 0)                             # resident across t
+    res4 = lambda t: (0, 0, 0, 0)
+    in_specs = [pl.BlockSpec((1, bsz, m), lambda t: (t, 0, 0)),
+                pl.BlockSpec((1, bsz), res2),
+                pl.BlockSpec((1, bsz), res2),
+                pl.BlockSpec(table.shape, res4)]
+    in_specs += [pl.BlockSpec(w.shape, res2) for w in w_xs]
+    in_specs += [pl.BlockSpec(w.shape, res2) for w in w_hs]
+    in_specs += [pl.BlockSpec((1, 4 * hdim), res2)] * n
+    out_specs = [pl.BlockSpec((1, bsz, hdim), lambda t: (t, 0, 0)),
+                 pl.BlockSpec(table.shape, res4)]
+    out_shape = [jax.ShapeDtypeStruct((t_len, bsz, hdim), sd),
+                 jax.ShapeDtypeStruct(table.shape, jnp.int32)]
+    outs = pl.pallas_call(
+        kernel,
+        grid=(t_len,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bsz, hdim), jnp.int32)] * (2 * n),
+        interpret=interpret,
+    )(x_int, gather_slots, scatter_slots, table, *w_xs, *w_hs,
+      *(b.reshape(1, -1).astype(jnp.int32) for b in b_wides))
+    return outs[0], outs[1]

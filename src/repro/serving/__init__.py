@@ -17,6 +17,11 @@ Public surface (docs/SERVING.md is the deployment guide):
     structured error/``state_reset`` reliability flags.
   * :class:`StateStore` — the bounded LRU carry store (exposed for tests
     and capacity planning).
+  * :class:`DeviceStateStore` / :class:`SlotAllocator` — the
+    device-resident alternative (``repro.serving.device_state``): carries
+    live in an on-accelerator slot table, the host keeps only the LRU
+    ``stream_id -> slot`` map, and the hot path ships slot ids instead of
+    (h, c) arrays (``ServingConfig.state_residency``).
   * :class:`ResiliencePolicy` / :class:`ExecutionGuard` — guarded wave
     execution: retry, timeout, backend degradation pallas -> xla -> ref
     with recovery probes (``repro.serving.resilience``).
@@ -37,6 +42,8 @@ Public surface (docs/SERVING.md is the deployment guide):
 """
 
 from repro.serving.cluster import ClusterConfig, ClusterServer   # noqa: F401
+from repro.serving.device_state import (DeviceStateStore,        # noqa: F401
+                                        SlotAllocator)
 from repro.serving.faults import (FaultConfig, FaultInjector,    # noqa: F401
                                   InjectedFault)
 from repro.serving.metrics import MetricsSink, WaveRecord        # noqa: F401
@@ -52,8 +59,9 @@ from repro.serving.server import (ServingConfig, StreamResult,   # noqa: F401
 from repro.serving.state import StateStore, StreamState          # noqa: F401
 
 __all__ = [
-    "ClusterConfig", "ClusterServer", "ExecutionGuard", "FaultConfig",
-    "FaultInjector", "GuardOutcome", "HashRing", "InjectedFault",
+    "ClusterConfig", "ClusterServer", "DeviceStateStore", "ExecutionGuard",
+    "FaultConfig", "FaultInjector", "GuardOutcome", "HashRing",
+    "InjectedFault", "SlotAllocator",
     "MetricsSink", "OverloadPolicy", "ResiliencePolicy", "ServerOverloaded",
     "ServingConfig", "StateStore", "StreamResult", "StreamServer",
     "StreamState", "Wave", "WaveRecord", "WaveScheduler", "WaveTimeout",

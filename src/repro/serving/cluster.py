@@ -51,7 +51,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Dict, Hashable, List, Optional, Sequence
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -348,10 +348,23 @@ class ClusterServer:
         results stashed for the next ``poll``, and the replica's server is
         closed.  Returns the ids of the streams that lose their home —
         only ~K/N of the cluster's streams (the consistent-hash guarantee;
-        everything else keeps replica, carry, and numbering).  Each moved
-        stream restarts on its new replica with ``state_reset=True``
-        provenance on its first window there.  ``abandon=True`` skips the
-        drain (replica died; its pending windows are lost)."""
+        everything else keeps replica, carry, and numbering).
+
+        What a moved stream keeps depends on where its carry lived.  With
+        HOST-resident state it restarts cold: ``state_reset=True``
+        provenance on its first window at the new replica.  With
+        DEVICE-resident state (``state_residency='device'``/``auto`` on a
+        pallas plan) a planned drain performs a WARM HANDOFF: after the
+        flush, each moved stream's carry is read back from the draining
+        replica's device table (the one sanctioned host/device state
+        transfer) and seeded into its new ring home, so its recurrence
+        continues bit-exactly — no reset, no flag (its per-replica seq
+        still restarts at 0).  ``abandon=True`` skips drain AND handoff
+        (replica died; pending windows and device-resident carries are
+        lost, and the moved streams restart cold with flagged resets).
+        Call with the moved streams quiescent — windows submitted for
+        them mid-drain race the handoff, exactly like they race the cold
+        path's re-route."""
         with self._lock:
             if name not in self._servers:
                 raise KeyError(f"no replica named {name!r}")
@@ -367,15 +380,37 @@ class ClusterServer:
         if not abandon:
             server.flush(timeout=timeout)
         stashed = [self._translate(name, r) for r in server.poll()]
+        with self._lock:
+            moved = [sid for sid, rname in self._route.items()
+                     if rname == name]
+        handoff: Dict[Hashable, object] = {}
+        if not abandon and server.state_residency == "device":
+            for sid in moved:
+                st = server.read_stream_state(sid)
+                if st is not None:
+                    handoff[sid] = st
         server.close(abandon=True)
+        seeds: List[Tuple[str, Hashable]] = []
         with self._lock:
             self._stash.extend(stashed)
             del self._servers[name]
             self._unhealthy.pop(name, None)
-            moved = [sid for sid, rname in self._route.items()
-                     if rname == name]
             for sid in moved:
-                del self._route[sid]    # next submit re-routes + flags
+                if sid in handoff:
+                    # Re-home the route NOW: the next submit sees
+                    # prev == target, so no reset flag — the seeded carry
+                    # makes the continuation real, not silent.
+                    dest = self._ring.route(sid)
+                    self._route[sid] = dest
+                    seeds.append((dest, sid))
+                else:
+                    del self._route[sid]   # next submit re-routes + flags
+            dest_servers = {d: self._servers[d] for d, _ in seeds}
+        # Seed outside the cluster lock: seed_stream_state takes the
+        # destination server's own locks (same ordering rule as
+        # mark_unhealthy's end_stream calls).
+        for dest, sid in seeds:
+            dest_servers[dest].seed_stream_state(sid, handoff[sid])
         return moved
 
     def mark_unhealthy(self, name: str, reason: str = "operator") -> None:

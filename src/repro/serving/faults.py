@@ -149,25 +149,50 @@ class FaultInjector:
         carries according to the configured rates."""
         return FaultyStateStore(store, self)
 
-    def _mutate_put(self, stream_id: Hashable,
-                    state: StreamState) -> Optional[StreamState]:
-        """The put-side injection: ``None`` means drop the put entirely
-        (state loss); otherwise the possibly-corrupted state to store."""
+    def wrap_device_state_store(self, store) -> "FaultyDeviceStateStore":
+        """The device-residency counterpart of :meth:`wrap_state_store`:
+        a delegating view of a ``DeviceStateStore`` whose per-wave
+        ``commit`` draws the same lose-then-corrupt schedule per stored
+        row (in batch-row order) that the host store draws per ``put`` —
+        so a given seed injects one identical schedule whichever side of
+        the host/device boundary the carry lives on."""
+        return FaultyDeviceStateStore(store, self)
+
+    def draw_put_fault(self, stream_id: Hashable) -> str:
+        """One put-side draw for ``stream_id``: ``"lose"`` (the carry is
+        dropped — counted and recorded in :attr:`lost_streams`),
+        ``"corrupt"`` (the stored codes must be bit-perturbed — counted
+        and recorded in :attr:`corrupted_streams`), or ``"none"``.  Both
+        store wrappers consume the RNG through this single method, in the
+        same lose-then-corrupt order, which is what keeps the host and
+        device schedules identical for a given seed."""
         with self._lock:
             lose = self._draw(self.config.state_loss_rate)
             corrupt = (not lose) and self._draw(self.config.state_corrupt_rate)
             if lose:
                 self._counts["state_losses"] += 1
                 self.lost_streams.add(stream_id)
-                return None
-            if not corrupt:
-                return state
-            self._counts["state_corruptions"] += 1
-            self.corrupted_streams.add(stream_id)
-            # XOR a low bit of every code: bitwise-plausible corruption
-            # that is guaranteed to change the carry.
-            return [(np.bitwise_xor(h, 1), np.bitwise_xor(c, 1))
-                    for h, c in state]
+                return "lose"
+            if corrupt:
+                self._counts["state_corruptions"] += 1
+                self.corrupted_streams.add(stream_id)
+                return "corrupt"
+            return "none"
+
+    def _mutate_put(self, stream_id: Hashable,
+                    state: StreamState) -> Optional[StreamState]:
+        """The host-store put-side injection: ``None`` means drop the put
+        entirely (state loss); otherwise the possibly-corrupted state to
+        store."""
+        fault = self.draw_put_fault(stream_id)
+        if fault == "lose":
+            return None
+        if fault != "corrupt":
+            return state
+        # XOR a low bit of every code: bitwise-plausible corruption that
+        # is guaranteed to change the carry.
+        return [(np.bitwise_xor(h, 1), np.bitwise_xor(c, 1))
+                for h, c in state]
 
     # -- reporting -----------------------------------------------------------
 
@@ -221,6 +246,51 @@ class FaultyStateStore:
     def stats(self) -> Dict[str, int]:
         """The wrapped store's counters."""
         return self._store.stats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, stream_id: Hashable) -> bool:
+        return stream_id in self._store
+
+
+class FaultyDeviceStateStore:
+    """A ``DeviceStateStore`` view with injected commit-time faults; every
+    other method delegates verbatim (kept API-compatible so the serving
+    layer cannot tell the difference — which is the point).
+
+    On the device path the kernel has already scattered every row's carry
+    into the table by the time the wave commits, so faults land AT COMMIT,
+    once per really-stored row in batch-row order — the exact points the
+    host store draws at (one ``put`` per row, same order).  A ``lose``
+    releases the row's slot (the scattered carry becomes unreachable — the
+    stream's next window restarts from the ZERO row, flagged
+    ``state_reset``, exactly like the host store popping the carry); a
+    ``corrupt`` XORs the low bit of every code in the row's table slot
+    (the same perturbation ``FaultyStateStore`` stores)."""
+
+    def __init__(self, store, injector: FaultInjector):
+        """Wrap ``store`` (a ``DeviceStateStore``) with ``injector``'s
+        put-side schedule."""
+        self._store = store
+        self._injector = injector
+
+    def commit(self, new_table, rows) -> None:
+        """Adopt the wave's updated table, then apply one put-fault draw
+        per stored row (``rows``: the wave's ``(batch_row, stream_id)``
+        scatters, in batch-row order)."""
+        self._store.commit(new_table, rows)
+        for _, sid in rows:
+            fault = self._injector.draw_put_fault(sid)
+            if fault == "lose":
+                self._store.pop(sid)
+            elif fault == "corrupt":
+                self._store.corrupt_slot(sid)
+
+    def __getattr__(self, name):
+        # lookup/assign/pop/read_state/seed_state/corrupt_slot/stats/
+        # table/capacity/zero_slot/trash_slot delegate verbatim.
+        return getattr(self._store, name)
 
     def __len__(self) -> int:
         return len(self._store)

@@ -23,21 +23,27 @@ Multiple sessions (replicas of ONE configuration sharing one set of
 weights, e.g. one per device) may be passed; waves are dispatched
 round-robin across them by the single strictly-ordered compute thread
 (load spreading — not yet parallel execution; the ordering is what keeps
-per-stream carries consistent).  State lives in a bounded LRU
-:class:`~repro.serving.state.StateStore` — an evicted or brand new stream
-starts from the all-zero reset carry.
+per-stream carries consistent).  State lives either in a bounded host LRU
+:class:`~repro.serving.state.StateStore` or — when the fused pallas
+kernel heads the ladder (``ServingConfig.state_residency``, default
+``auto``) — in a device-resident slot table
+(:class:`~repro.serving.device_state.DeviceStateStore`): same LRU
+semantics, but the (h, c) codes never cross the host/device boundary on
+the hot path, only two (B,) slot-id vectors do.  An evicted or brand new
+stream starts from the all-zero reset carry either way.
 
 The round-robin is WAVE-level, not stream-level: with >= 2 sessions a
 stream's consecutive windows may execute on DIFFERENT sessions
 (``StreamResult.routed_replica`` records which, as the session index).
-That is correct today only because the carry lives host-side in the
-shared ``StateStore`` — every session reads the same store, so which
-session computed window *k* does not matter for window *k+1*.  The moment
-state becomes device-resident (ROADMAP item 1), or sessions sit on
-different devices whose transfers you care about, this assignment is the
-wrong one: use ``repro.serving.cluster.ClusterServer``, which pins every
-stream to exactly one replica by consistent hash so its carry stays
-replica-local (the routing invariant, pinned in ``tests/test_cluster.py``).
+That is correct only because a multi-session server's carry lives
+host-side in the shared ``StateStore`` — every session reads the same
+store, so which session computed window *k* does not matter for window
+*k+1*.  Device residency therefore requires a SINGLE session (one table
+on one device; ``auto`` falls back to host for replicas): to scale
+device-resident state across replicas use
+``repro.serving.cluster.ClusterServer``, which pins every stream to
+exactly one replica by consistent hash so its carry stays replica-local
+(the routing invariant, pinned in ``tests/test_cluster.py``).
 """
 
 from __future__ import annotations
@@ -46,7 +52,8 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Dict, Hashable, Iterable, Iterator, List, Optional, Union
+from typing import (Dict, Hashable, Iterable, Iterator, List, Optional,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -99,7 +106,17 @@ class ServingConfig:
     ``resilience``: the guarded-execution policy (retry/backoff/timeout +
     backend degradation, docs/SERVING.md §Reliability); every wave runs
     under it.  ``overload``: admission-control / load-shedding policy
-    (None = legacy block-on-backpressure, never shed)."""
+    (None = legacy block-on-backpressure, never shed).
+
+    ``state_residency``: where per-stream carries live on a stateful
+    server.  ``auto`` follows the plan — the device-resident slot table
+    when the fused pallas kernel heads the ladder (single-session
+    servers; ``plan()['state_residency']``), else the host-side LRU
+    ``StateStore``.  ``device`` forces the slot table (any stateful
+    engine — ``ref``/``xla`` run the XLA-level slot adapter); ``host``
+    forces the legacy host store.  Both sides are bit-identical; device
+    residency just stops shipping (h, c) arrays across the host/device
+    boundary every wave (docs/SERVING.md §State residency)."""
 
     batch: int = 256
     path: str = "int"
@@ -112,6 +129,7 @@ class ServingConfig:
     max_streams: int = 1024
     resilience: ResiliencePolicy = ResiliencePolicy()
     overload: Optional[OverloadPolicy] = None
+    state_residency: str = "auto"
 
     def __post_init__(self):
         """Reject contradictory settings at construction time."""
@@ -120,6 +138,14 @@ class ServingConfig:
                 f"stateful serving carries integer (h, c) codes, so it "
                 f"requires path='int' (got path={self.path!r}); set "
                 f"stateful=False for the float/qat paths")
+        if self.state_residency not in ("auto", "host", "device"):
+            raise ValueError(
+                f"state_residency must be auto|host|device, got "
+                f"{self.state_residency!r}")
+        if self.state_residency == "device" and not self.stateful:
+            raise ValueError(
+                "state_residency='device' is a stateful-serving knob; a "
+                "stateless server carries no per-stream state to place")
         if self.max_results is not None and self.max_results < 1:
             raise ValueError(
                 f"max_results must be >= 1, got {self.max_results}")
@@ -212,12 +238,34 @@ class StreamServer:
         # preferred ladder levels cost nothing until a degradation
         # actually runs them.
         from repro import backends as _backends
+        #: Resolved carry placement: "device" | "host" on a stateful
+        #: server, None on a stateless one (ServingConfig.state_residency
+        #: documents the knob; auto follows plan()["state_residency"]).
+        self.state_residency: Optional[str] = None
         if cfg.stateful:
             ladder = _backends.degradation_ladder(
                 sessions[0].model, sessions[0].accel, override=cfg.backend,
                 stateful=True)
-            self._fns = [[(n, s.compiled_stateful(n)) for n in ladder]
-                         for s in sessions]
+            residency = cfg.state_residency
+            if residency == "auto":
+                residency = ("device" if ladder[0] == "pallas"
+                             and len(sessions) == 1 else "host")
+            elif residency == "device" and len(sessions) > 1:
+                # One table lives on one device; replicas round-robining
+                # waves into private tables would shear a stream's carry
+                # across them.  Sharding streams across per-replica tables
+                # is ClusterServer's job (consistent routing).
+                raise ValueError(
+                    "state_residency='device' requires a single session; "
+                    "use ClusterServer to shard streams across replicas, "
+                    "each with its own device-resident table")
+            self.state_residency = residency
+            if residency == "device":
+                self._fns = [[(n, s.compiled_stateful_slots(n))
+                              for n in ladder] for s in sessions]
+            else:
+                self._fns = [[(n, s.compiled_stateful(n)) for n in ladder]
+                             for s in sessions]
         elif cfg.path == "int":
             ladder = _backends.degradation_ladder(
                 sessions[0].model, sessions[0].accel, override=cfg.backend,
@@ -235,9 +283,18 @@ class StreamServer:
                           for n, fn in per_session]
                          for per_session in self._fns]
         self.guard = ExecutionGuard(ladder, cfg.resilience)
-        self.states = StateStore(cfg.max_streams) if cfg.stateful else None
-        if cfg.stateful and fault_injector is not None:
-            self.states = fault_injector.wrap_state_store(self.states)
+        if not cfg.stateful:
+            self.states = None
+        elif self.state_residency == "device":
+            from repro.serving.device_state import DeviceStateStore
+            self.states = DeviceStateStore(sessions[0], cfg.max_streams)
+            if fault_injector is not None:
+                self.states = fault_injector.wrap_device_state_store(
+                    self.states)
+        else:
+            self.states = StateStore(cfg.max_streams)
+            if fault_injector is not None:
+                self.states = fault_injector.wrap_state_store(self.states)
         self.metrics = MetricsSink()
         self._results: "queue.Queue" = queue.Queue(
             maxsize=cfg.max_results or 0)
@@ -382,6 +439,39 @@ class StreamServer:
             # put and erase a reborn stream's carry (or miss a stale one).
             self.states.pop(stream_id)
 
+    def read_stream_state(self, stream_id: Hashable):
+        """A host-side copy of a stream's carry (per-layer ``[(h, c),
+        ...]`` int32 rows), or ``None`` when the server holds none.  On a
+        device-resident server this is the one sanctioned state read-back,
+        meant for PLANNED stream movement (``ClusterServer`` drain) — not
+        for the hot path.  Call only with the stream quiescent (no windows
+        in flight), e.g. after ``flush()``."""
+        if self.states is None:
+            return None
+        if self.state_residency == "device":
+            return self.states.read_state(stream_id)
+        st = self.states.get(stream_id)
+        if st is None:
+            return None
+        return [(h.copy(), c.copy()) for h, c in st]
+
+    def seed_stream_state(self, stream_id: Hashable, state) -> None:
+        """Plant a carry for ``stream_id`` (per-layer ``[(h, c), ...]``
+        int32 rows) as if the server had computed it — the destination
+        half of a warm stream handoff.  The stream's next window continues
+        the recurrence from ``state`` with no ``state_reset`` flag.  Any
+        streams the insertion LRU-evicts are reconciled exactly like a
+        wave's own evictions."""
+        if self.states is None:
+            raise ValueError("cannot seed state on a stateless server")
+        with self._seq_lock:
+            if self.state_residency == "device":
+                evicted = set(self.states.seed_state(stream_id, state))
+            else:
+                evicted = set(self.states.put(
+                    stream_id, [(h.copy(), c.copy()) for h, c in state]))
+        self._reconcile_evictions(evicted)
+
     def close(self, abandon: bool = False,
               timeout: float = 30.0) -> List[str]:
         """Stop the server.  Default: drain submitted windows first;
@@ -418,6 +508,7 @@ class StreamServer:
         s["stateful"] = self.config.stateful
         s["sessions"] = len(self._sessions)
         s["state"] = self.states.stats() if self.states is not None else None
+        s["state_residency"] = self.state_residency
         g = self.guard.stats()
         sched = self._sched.stats()
         counters = self.metrics.counters()
@@ -438,6 +529,13 @@ class StreamServer:
             "stream_errors": counters.get("stream_errors", 0),
             "injected": (self.fault_injector.stats()
                          if self.fault_injector is not None else None),
+        }
+        # Per-wave host<->device state traffic: the device-residency win is
+        # to_device/from_device pinned at 0 while only slot ids travel.
+        s["state_transfer"] = {
+            "to_device_bytes": counters.get("state_bytes_to_device", 0),
+            "from_device_bytes": counters.get("state_bytes_from_device", 0),
+            "slot_id_bytes": counters.get("slot_id_bytes", 0),
         }
         s["health"] = self.health()
         if s["waves"]:
@@ -481,6 +579,7 @@ class StreamServer:
             "deadline_miss_rate": sched["deadline_miss_rate"],
             "live_streams": (len(self.states)
                              if self.states is not None else None),
+            "state_residency": self.state_residency,
             "leaked_threads": list(self._sched.leaked_threads),
         }
 
@@ -501,7 +600,18 @@ class StreamServer:
         self._rr += 1
         t0 = time.perf_counter()
         x = jnp.asarray(wave.x)
-        if self.config.stateful:
+        device_state = self.state_residency == "device"
+        if device_state:
+            # Slot path: the carries never leave the table — only two (B,)
+            # int32 slot-id vectors cross to the device.  The allocator
+            # transaction (lookup + assign + tombstone checks) happens
+            # BEFORE compute, so faults can only strand slots, never
+            # corrupt the allocator<->table correspondence.
+            g, s, reset, rows, evicted = self._gather_slots(wave)
+            self.metrics.count("slot_id_bytes", int(g.nbytes + s.nbytes))
+            outcome = self.guard.run(fns, x, self.states.table,
+                                     jnp.asarray(g), jnp.asarray(s))
+        elif self.config.stateful:
             gathered, reset = self._gather(wave)
             outcome = self.guard.run(fns, x, gathered)
         else:
@@ -509,8 +619,19 @@ class StreamServer:
             outcome = self.guard.run(fns, x)
         if not outcome.ok:
             self._fail_wave(wave, outcome, t0, sess_idx)
+            if device_state:
+                # Slot assignment (and any LRU evictions) happened before
+                # compute; the victims are still gone even though the
+                # wave's table update was discarded.
+                self._reconcile_evictions(evicted)
             return
-        if self.config.stateful:
+        if device_state:
+            y, new_table = outcome.value
+            y = np.asarray(y)
+            self.states.commit(new_table, rows)
+            self._retire(wave)
+            self._reconcile_evictions(evicted)
+        elif self.config.stateful:
             y, new_state = outcome.value
             y = np.asarray(y)
             evicted = self._scatter(wave, new_state)
@@ -607,7 +728,65 @@ class StreamServer:
                 reset[i] = True
         state = tuple((jnp.asarray(hs[li]), jnp.asarray(cs[li]))
                       for li in range(nl))
+        self.metrics.count("state_bytes_to_device",
+                           sum(int(h.nbytes + c.nbytes) for h, c in state))
         return state, reset
+
+    def _gather_slots(self, wave: Wave):
+        """The device-residency counterpart of :meth:`_gather` +
+        :meth:`_scatter`'s bookkeeping, run BEFORE compute: one allocator
+        transaction under ``_seq_lock`` producing the wave's slot-id
+        vectors.  Returns ``(gather, scatter, reset, rows, evicted)``:
+
+        * ``gather[i]``: table row whose carry seeds batch row ``i`` at
+          t == 0 — the stream's slot, or ZERO for new/evicted streams and
+          padding (``reset[i]`` is flagged exactly like :meth:`_gather`);
+        * ``scatter[i]``: row for the final carry at t == T-1 — the
+          stream's (possibly new) slot, or TRASH for padding, tombstoned
+          windows, and same-wave eviction victims;
+        * ``rows``: the real scatters as ``(batch_row, stream_id)``, the
+          unit the fault injector draws per-put faults over;
+        * ``evicted``: ids LRU-evicted by this wave's assignments.
+
+        The two phases replay the host path's store-op order — every
+        lookup (get), then every assignment (put) in batch-row order — so
+        hit/miss/eviction counters and any injected fault schedule match
+        the host store draw for draw."""
+        store = self.states
+        batch = self.config.batch
+        g = np.full(batch, store.zero_slot, dtype=np.int32)
+        s = np.full(batch, store.trash_slot, dtype=np.int32)
+        reset = [False] * len(wave.slots)
+        rows: List[Tuple[int, Hashable]] = []
+        evicted_all: set = set()
+        with self._seq_lock:
+            for i, slot in enumerate(wave.slots):
+                sl = store.lookup(slot.stream_id)
+                if sl is not None:
+                    g[i] = sl
+                elif slot.seq > 0:
+                    reset[i] = True
+            row_of_slot: Dict[int, int] = {}
+            for i, slot in enumerate(wave.slots):
+                sid = slot.stream_id
+                watermark = self._ended.get(sid)
+                if watermark is not None:
+                    if slot.sub_idx < watermark:
+                        continue   # ended-generation carry: scatter=TRASH
+                    del self._ended[sid]   # stream reborn after the end
+                sl, evicted = store.assign(sid)
+                evicted_all.update(evicted)
+                j = row_of_slot.pop(sl, None)
+                if j is not None:
+                    # An earlier row of THIS wave was assigned this slot
+                    # and its stream was just LRU-evicted (batch >
+                    # capacity): its carry would be dropped by the host
+                    # store too — redirect its dead scatter to TRASH.
+                    s[j] = store.trash_slot
+                row_of_slot[sl] = i
+                s[i] = sl
+                rows.append((i, sid))
+        return g, s, reset, rows, evicted_all
 
     def _scatter(self, wave: Wave, new_state) -> set:
         """Store each real slot's updated carry; returns the ids evicted by
@@ -616,6 +795,8 @@ class StreamServer:
         store); so are carries tombstoned by ``end_stream`` — windows
         submitted before the end must not resurrect the stream's state."""
         rows = [(np.asarray(h), np.asarray(c)) for h, c in new_state]
+        self.metrics.count("state_bytes_from_device",
+                           sum(int(h.nbytes + c.nbytes) for h, c in rows))
         evicted_all = set()
         for i, slot in enumerate(wave.slots):
             sid = slot.stream_id

@@ -316,14 +316,16 @@ def test_cluster_overload_propagates_replica_name(sess):
 
 
 def test_cluster_remove_replica_moves_only_its_streams(sess):
-    """Drain/rebalance: the ring shrink moves ONLY the removed replica's
-    streams (~K/N); each restarts at its new home with seq 0 and
-    ``state_reset=True`` provenance, and its post-move prediction equals a
-    fresh stream's (the carry really did reset).  Unmoved streams keep
-    replica, numbering, and carry."""
+    """Drain/rebalance with HOST-resident state (pinned — device residency
+    upgrades the drain to a warm handoff, covered separately below): the
+    ring shrink moves ONLY the removed replica's streams (~K/N); each
+    restarts at its new home with seq 0 and ``state_reset=True``
+    provenance, and its post-move prediction equals a fresh stream's (the
+    carry really did reset).  Unmoved streams keep replica, numbering,
+    and carry."""
     k = 2
     streams = {f"d{i}": _windows(k + 1, seed=40 + i) for i in range(8)}
-    with _cluster(sess, 3) as cluster:
+    with _cluster(sess, 3, state_residency="host") as cluster:
         for w in range(k):
             for sid, xs in streams.items():
                 cluster.submit(sid, xs[w])
@@ -355,6 +357,96 @@ def test_cluster_remove_replica_moves_only_its_streams(sess):
                 np.testing.assert_array_equal(r.y, oracle[0])
         with pytest.raises(KeyError):
             cluster.remove_replica(victim)          # already gone
+
+
+def test_cluster_remove_replica_warm_handoff_device_residency(sess):
+    """Satellite acceptance: with DEVICE-resident state (the default —
+    ``auto`` resolves to the slot table on this pallas plan) a planned
+    drain upgrades to a WARM handoff.  The ring shrink still moves
+    exactly the victim's streams, but each moved carry is read back from
+    the dying replica's slot table and seeded into the stream's new ring
+    home — the destination's read-back rows must reproduce the ref
+    oracle's threaded state — so the stream's next window continues the
+    recurrence bit-exactly against the concatenated oracle: per-replica
+    seq restarts at 0 with NO ``state_reset`` flag.  Unmoved streams
+    keep replica, numbering, and carry, exactly as on the cold path."""
+    k, t = 2, MODEL.seq_len
+    streams = {f"w{i}": _windows(k + 1, seed=60 + i) for i in range(8)}
+    ref = sess.compiled_stateful("ref")
+
+    def carry_after(xs, n):
+        state = sess.init_state(1)
+        for w in xs[:n]:
+            _, state = ref(w[None], state)
+        return state
+
+    with _cluster(sess, 3) as cluster:
+        assert all(s.state_residency == "device"
+                   for s in cluster._servers.values())
+        for w in range(k):
+            for sid, xs in streams.items():
+                cluster.submit(sid, xs[w])
+        cluster.drain()
+        before = {sid: cluster.replica_for(sid) for sid in streams}
+        victim = before["w0"]
+        moved = cluster.remove_replica(victim)
+        assert sorted(moved) == sorted(
+            s for s, r in before.items() if r == victim)
+        assert victim not in cluster.replicas
+        for sid in moved:
+            # The handoff seeded the carry at the stream's new ring home,
+            # and what reads back row-for-row IS the oracle's state.
+            dest = cluster.replica_for(sid)
+            assert dest != victim
+            got = cluster._servers[dest].read_stream_state(sid)
+            assert got is not None
+            oracle_state = carry_after(streams[sid], k)
+            for li, (h, c) in enumerate(got):
+                oh, oc = oracle_state[li]
+                np.testing.assert_array_equal(h, np.asarray(oh)[0])
+                np.testing.assert_array_equal(c, np.asarray(oc)[0])
+        for sid, xs in streams.items():
+            cluster.submit(sid, xs[k])
+        results = cluster.drain()
+        by = {r.stream_id: r for r in results}
+        for sid, xs in streams.items():
+            r = by[sid]
+            assert r.ok and not r.state_reset, sid
+            if sid in moved:
+                assert r.seq == 0 and r.routed_replica != victim
+            else:
+                assert r.seq == k and r.routed_replica == before[sid]
+            oracle = np.asarray(sess.infer(
+                jnp.asarray(xs.reshape(1, (k + 1) * t, 1)), path="int"))
+            np.testing.assert_array_equal(r.y, oracle[0])
+
+
+def test_cluster_remove_replica_abandon_skips_handoff(sess):
+    """``abandon=True`` on a device-residency drain: the replica died, so
+    there is nothing to read back — moved streams restart COLD at their
+    new home with the flagged reset, the cold path's contract."""
+    k = 1
+    streams = {f"a{i}": _windows(k + 1, seed=80 + i) for i in range(8)}
+    with _cluster(sess, 3) as cluster:
+        for sid, xs in streams.items():
+            cluster.submit(sid, xs[0])
+        cluster.drain()
+        before = {sid: cluster.replica_for(sid) for sid in streams}
+        victim = before["a0"]
+        moved = cluster.remove_replica(victim, abandon=True)
+        for sid, xs in streams.items():
+            cluster.submit(sid, xs[k])
+        by = {r.stream_id: r for r in cluster.drain()}
+        t = MODEL.seq_len
+        for sid, xs in streams.items():
+            r = by[sid]
+            if sid in moved:
+                assert r.seq == 0 and r.state_reset
+                fresh = np.asarray(sess.infer(
+                    jnp.asarray(xs[k].reshape(1, t, 1)), path="int"))
+                np.testing.assert_array_equal(r.y, fresh[0])
+            else:
+                assert r.seq == k and not r.state_reset
 
 
 def test_cluster_cannot_remove_last_replica(sess):

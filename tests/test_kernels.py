@@ -118,6 +118,85 @@ def test_qlstm_multilayer_kernel_rejects_mismatched_tuples():
                                     cfg=cfg)
 
 
+def _slot_battery_weights(num_layers, cfg, T, B, M, H):
+    """Per-layer random weights for the slot-kernel battery."""
+    x, wx0, wh0, b0 = _rand_lstm(T, B, M, H, cfg)
+    wxs, whs, bs = [wx0], [wh0], [b0]
+    for _ in range(num_layers - 1):
+        _, wxd, whd, bd = _rand_lstm(T, B, H, H, cfg)
+        wxs.append(wxd), whs.append(whd), bs.append(bd)
+    return x, tuple(wxs), tuple(whs), tuple(bs)
+
+
+@pytest.mark.parametrize("cfg", [FXP_4_8, FixedPointConfig(6, 8), FXP_8_16])
+@pytest.mark.parametrize("method", ["arithmetic", "step"])
+@pytest.mark.parametrize("num_layers", [1, 2, 3])
+def test_qlstm_slot_kernel_matches_gathered_multilayer(cfg, method,
+                                                       num_layers):
+    """The slot-battery acceptance sweep: the in-kernel gather/scatter
+    entry, over random slot PERMUTATIONS of a pre-filled state table, is
+    bit-exact with the multilayer kernel handed the same carries as
+    explicit (h, c) arrays — outputs AND the updated table — across fxp
+    widths, HardSigmoid methods, and 1-3 layers.  Also pins the table
+    conventions: ZERO-row gathers start the recurrence from the reset
+    carry, TRASH-row scatters drop a row's final state, and table rows
+    the wave never scattered to are byte-identical before/after."""
+    from repro.kernels.qlstm_cell import (qlstm_seq_multilayer_pallas,
+                                          qlstm_seq_slot_pallas)
+    T, B, M, H = 4, 5, 2, 8
+    n_data = 6                      # slots 0..5; ZERO = 6, TRASH = 7
+    zero_slot, trash_slot = n_data, n_data + 1
+    x, wxs, whs, bs = _slot_battery_weights(num_layers, cfg, T, B, M, H)
+    rng = np.random.default_rng(7 * num_layers + len(method))
+    for trial in range(3):
+        table = rng.integers(-100, 100,
+                             (n_data + 2, num_layers, 2, H)).astype(np.int32)
+        table[zero_slot] = 0
+        gather = rng.permutation(n_data)[:B].astype(np.int32)
+        scatter = rng.permutation(n_data)[:B].astype(np.int32)
+        gather[0] = zero_slot       # a fresh/evicted stream's row
+        scatter[1] = trash_slot     # a padding/tombstoned row
+        got, new_table = qlstm_seq_slot_pallas(
+            x, jnp.asarray(gather), jnp.asarray(scatter), jnp.asarray(table),
+            wxs, whs, bs, cfg=cfg, hs_method=method)
+        # Oracle: gather the same carries host-side, run the plain
+        # multilayer kernel, scatter host-side.
+        h0s = tuple(jnp.asarray(table[gather, li, 0])
+                    for li in range(num_layers))
+        c0s = tuple(jnp.asarray(table[gather, li, 1])
+                    for li in range(num_layers))
+        want, state = qlstm_seq_multilayer_pallas(
+            x, wxs, whs, bs, h0s, c0s, cfg=cfg, hs_method=method)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        expect = table.copy()
+        for i in range(B):
+            if scatter[i] == trash_slot:
+                continue
+            for li in range(num_layers):
+                expect[scatter[i], li, 0] = np.asarray(state[li][0][i])
+                expect[scatter[i], li, 1] = np.asarray(state[li][1][i])
+        expect[trash_slot] = np.asarray(new_table)[trash_slot]  # don't-care
+        np.testing.assert_array_equal(np.asarray(new_table), expect)
+        # The ZERO row survives every wave unwritten.
+        assert not np.asarray(new_table)[zero_slot].any()
+
+
+def test_qlstm_slot_kernel_validates_inputs():
+    """Layer-count mismatches and undersized tables fail loudly."""
+    from repro.kernels.qlstm_cell import qlstm_seq_slot_pallas
+    cfg = FXP_4_8
+    x, wx, wh, b = _rand_lstm(3, 2, 1, 4, cfg)
+    slots = jnp.zeros((2,), jnp.int32)
+    table = jnp.zeros((5, 1, 2, 4), jnp.int32)
+    with pytest.raises(ValueError, match="layer count"):
+        qlstm_seq_slot_pallas(x, slots, slots, table, (wx, wx), (wh,), (b,),
+                              cfg=cfg)
+    with pytest.raises(ValueError, match="table"):
+        qlstm_seq_slot_pallas(x, slots, slots, jnp.zeros((2, 1, 2, 4),
+                                                         jnp.int32),
+                              (wx,), (wh,), (b,), cfg=cfg)
+
+
 def test_qlstm_kernel_int16_datapath():
     """(8,16) — the baseline [15] width — through the same kernel."""
     cfg = FXP_8_16

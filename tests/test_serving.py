@@ -130,10 +130,15 @@ def test_end_stream_during_scatter_is_not_undone(sess):
     """end_stream racing the compute thread's scatter of the same stream's
     in-flight carry: the scatter's tombstone-check + put and end_stream's
     pop are serialised under one lock, so the ended carry can never be
-    re-stored afterwards (the TOCTOU this pins down resurrected it)."""
+    re-stored afterwards (the TOCTOU this pins down resurrected it).
+    Host residency pinned: the race is host-scatter-specific (the device
+    path runs its whole allocator transaction before compute, under the
+    same lock end_stream takes, so there is no post-compute put to
+    race)."""
     import threading
     x = _windows(1, seed=18)
-    with StreamServer(sess, batch=2, deadline_s=0.01) as srv:
+    with StreamServer(sess, batch=2, deadline_s=0.01,
+                      state_residency="host") as srv:
         orig_put = srv.states.put
         in_put, release = threading.Event(), threading.Event()
 
@@ -551,3 +556,222 @@ def test_invalid_scheduler_bounds_rejected(sess):
         StreamServer(sess, batch=2, max_pending=0)
     with pytest.raises(ValueError, match="queue_depth"):
         StreamServer(sess, batch=2, queue_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident state: SlotAllocator properties + DeviceStateStore
+# ---------------------------------------------------------------------------
+
+from hypothesis_compat import given, settings, st  # noqa: E402
+from repro.serving import DeviceStateStore, SlotAllocator  # noqa: E402
+
+_DUMMY_STATE = [(np.zeros(4, np.int32), np.zeros(4, np.int32))]
+
+_ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["lookup", "assign", "release"]),
+              st.integers(0, 7)),
+    max_size=120)
+
+
+def _drive(alloc, ops, on_assign=None):
+    """Replay an op sequence, checking the structural invariants after
+    every step: live slots unique and in range, occupancy bounded by
+    capacity, high-water bounded by peak occupancy."""
+    peak = 0
+    for op, sid in ops:
+        if op == "lookup":
+            alloc.lookup(sid)
+        elif op == "assign":
+            slot, evicted = alloc.assign(sid)
+            assert 0 <= slot < alloc.capacity
+            if on_assign is not None:
+                on_assign(sid, slot, evicted)
+        else:
+            alloc.release(sid)
+        live = alloc.live()
+        peak = max(peak, len(live))
+        assert len(live) <= alloc.capacity
+        slots = list(live.values())
+        assert len(slots) == len(set(slots))           # unique live slots
+        assert all(0 <= s < alloc.capacity for s in slots)
+        assert alloc.high_water <= peak or alloc.high_water <= len(live)
+    assert alloc.high_water <= peak if ops else alloc.high_water == 0
+
+
+@given(st.integers(1, 5), _ops_strategy)
+@settings(max_examples=120, deadline=None)
+def test_slot_allocator_live_slots_unique_property(capacity, ops):
+    """PROPERTY: under any lookup/assign/release sequence, live streams
+    hold pairwise-distinct in-range slots, occupancy never exceeds
+    capacity, and the high-water mark never exceeds peak occupancy (slots
+    are not burned by churn)."""
+    _drive(SlotAllocator(capacity), ops)
+
+
+@given(st.integers(1, 5), _ops_strategy)
+@settings(max_examples=120, deadline=None)
+def test_slot_allocator_freed_slots_reused_before_growth(capacity, ops):
+    """PROPERTY: a fresh assignment always reuses the most recently freed
+    slot (LIFO) when one exists; the high-water mark only grows when the
+    free list is empty."""
+    alloc = SlotAllocator(capacity)
+    shadow_free = []                 # mirrors the LIFO free list
+    for op, sid in ops:
+        if op == "lookup":
+            alloc.lookup(sid)
+        elif op == "assign":
+            fresh = sid not in alloc
+            hw = alloc.high_water
+            slot, evicted = alloc.assign(sid)
+            if fresh:
+                if shadow_free:
+                    assert slot == shadow_free.pop()   # LIFO reuse first
+                    assert alloc.high_water == hw
+                elif not evicted:
+                    assert slot == hw and alloc.high_water == hw + 1
+                else:
+                    assert alloc.high_water == hw      # victim's slot
+            else:
+                assert alloc.high_water == hw
+        else:
+            if sid in alloc:
+                shadow_free.append(alloc.release(sid))
+            else:
+                assert alloc.release(sid) is None
+
+
+@given(st.integers(1, 5), _ops_strategy)
+@settings(max_examples=120, deadline=None)
+def test_slot_allocator_lru_matches_statestore_oracle(capacity, ops):
+    """PROPERTY: the allocator IS the StateStore's LRU policy with rows
+    swapped for slot ids — identical op sequences produce identical live
+    sets, identical eviction victims in identical order, and identical
+    hit/miss/eviction counters."""
+    alloc = SlotAllocator(capacity)
+    store = StateStore(capacity)
+    for op, sid in ops:
+        if op == "lookup":
+            assert (alloc.lookup(sid) is not None) == \
+                (store.get(sid) is not None)
+        elif op == "assign":
+            _, evicted = alloc.assign(sid)
+            assert evicted == store.put(sid, _DUMMY_STATE)
+        else:
+            assert (alloc.release(sid) is not None) == \
+                (store.pop(sid) is not None)
+        assert set(alloc.live()) == set(store._states)
+        a, s = alloc, store.stats()
+        assert (a.hits, a.misses, a.evictions) == \
+            (s["hits"], s["misses"], s["evictions"])
+
+
+def test_slot_allocator_matches_statestore_oracle_seeded():
+    """The LRU-oracle property replayed deterministically (the hypothesis
+    variant skips on bare interpreters): 2000 seeded ops over a tight id
+    space against every small capacity."""
+    rng = np.random.default_rng(123)
+    for capacity in (1, 2, 3, 5):
+        alloc, store = SlotAllocator(capacity), StateStore(capacity)
+        shadow_free = []
+        for _ in range(2000):
+            op = ("lookup", "assign", "release")[rng.integers(3)]
+            sid = int(rng.integers(8))
+            if op == "lookup":
+                assert (alloc.lookup(sid) is not None) == \
+                    (store.get(sid) is not None)
+            elif op == "assign":
+                fresh = sid not in alloc
+                hw = alloc.high_water
+                slot, evicted = alloc.assign(sid)
+                assert evicted == store.put(sid, _DUMMY_STATE)
+                if fresh and shadow_free:
+                    assert slot == shadow_free.pop() and \
+                        alloc.high_water == hw
+            else:
+                slot = alloc.release(sid)
+                assert (slot is not None) == \
+                    (store.pop(sid) is not None)
+                if slot is not None:
+                    shadow_free.append(slot)
+            assert set(alloc.live()) == set(store._states)
+            live_slots = list(alloc.live().values())
+            assert len(live_slots) == len(set(live_slots))
+            s = store.stats()
+            assert (alloc.hits, alloc.misses, alloc.evictions) == \
+                (s["hits"], s["misses"], s["evictions"])
+
+
+def test_slot_allocator_validates_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        SlotAllocator(0)
+
+
+def test_state_residency_resolution(sess):
+    """plan()["state_residency"], the ServingConfig knob, and their
+    interaction: auto follows the plan for a single session, multi-session
+    auto falls back to host, explicit device + replicas is an error, and
+    the config validates its values."""
+    assert sess.plan["state_residency"] == "device"
+    srv = StreamServer(sess, batch=2)
+    assert srv.state_residency == "device"
+    assert isinstance(srv.states, DeviceStateStore)
+    assert srv.health()["state_residency"] == "device"
+    srv.close()
+    srv = StreamServer(sess, batch=2, state_residency="host")
+    assert srv.state_residency == "host"
+    assert isinstance(srv.states, StateStore)
+    srv.close()
+    replica = repro.build(MODEL, params=sess.params, seed=0).quantize()
+    srv = StreamServer([sess, replica], batch=2)       # auto, 2 sessions
+    assert srv.state_residency == "host"
+    srv.close()
+    with pytest.raises(ValueError, match="single session"):
+        StreamServer([sess, replica], batch=2, state_residency="device")
+    with pytest.raises(ValueError, match="host|device"):
+        ServingConfig(state_residency="gpu")
+    with pytest.raises(ValueError, match="stateful"):
+        ServingConfig(stateful=False, state_residency="device")
+    srv = StreamServer(sess, batch=2, stateful=False)  # stateless: None
+    assert srv.state_residency is None
+    srv.close()
+
+
+def test_device_store_rejects_host_only_surfaces(sess):
+    """The device store is not a drop-in for code reaching into the host
+    store's (h, c) surfaces — it says so instead of half-working."""
+    store = DeviceStateStore(sess, capacity=4)
+    with pytest.raises(AttributeError, match="state_residency='host'"):
+        store.put("s", _DUMMY_STATE)
+    assert store.zero_slot == 4 and store.trash_slot == 5
+    assert store.table.shape == (6, MODEL.num_layers, 2, MODEL.hidden_size)
+
+
+def test_device_vs_host_bit_exact_under_eviction_churn(sess):
+    """The serving-level battery: more streams than slots (forced LRU
+    evictions, slot reuse, mid-stream resets) — the device path's
+    results, reset flags, and state counters all match the host path
+    wave for wave, and both match the fresh/continued oracle."""
+    k, n_streams, cap = 3, 6, 4
+    xs = {f"s{i}": _windows(k, seed=70 + i) for i in range(n_streams)}
+
+    def run(residency):
+        rows, srv_stats = {}, None
+        with StreamServer(sess, batch=4, deadline_s=0.005, max_streams=cap,
+                          state_residency=residency) as srv:
+            for w in range(k):
+                for sid in xs:
+                    srv.submit(sid, xs[sid][w])
+                srv.flush(timeout=60)
+            for r in srv.drain(timeout=60):
+                rows[(r.stream_id, r.seq, r.state_reset)] = np.asarray(r.y)
+            stats = srv.states.stats()
+            srv_stats = {q: stats[q] for q in ("hits", "misses",
+                                               "evictions", "live_streams")}
+        return rows, srv_stats
+
+    host_rows, host_stats = run("host")
+    dev_rows, dev_stats = run("device")
+    assert host_stats == dev_stats and host_stats["evictions"] > 0
+    assert host_rows.keys() == dev_rows.keys()     # same reset flags
+    for key in host_rows:
+        np.testing.assert_array_equal(host_rows[key], dev_rows[key])
