@@ -20,7 +20,12 @@ import sys
 
 def sweep_payload(smoke: bool = False, iters: int = 20, seed: int = 0):
     from repro import explore
-    space = explore.smoke_space() if smoke else explore.paper_space(batch=256)
+    # The smoke sweep walks the whole cell zoo: 4 deterministic points per
+    # cell.  LSTM labels stay suffix-free, so pre-cell-axis artifacts and
+    # trend lines keep their names; gru/rglru points land on the xla
+    # backend (no fused kernel) and are labelled "<base>_<cell>".
+    space = explore.smoke_space(cell=("lstm", "gru", "rglru")) if smoke \
+        else explore.paper_space(batch=256)
     # 3-objective front: the paper's GOP/s + GOP/s/W pair plus quantisation
     # fidelity, so the wide (8,16) baseline format earns its place on the
     # front through accuracy rather than vanishing behind (4,8)'s speed.

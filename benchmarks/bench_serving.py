@@ -77,7 +77,13 @@ PAPER_GOPS_PER_WATT = 11.89       # Table 4
 # kept for the default auto run); stateful summaries carry the resolved
 # "state_residency" and the "state_transfer" per-wave byte counters
 # (to_device/from_device pinned at 0 on the device point).
-SCHEMA_VERSION = 5
+# 6: --cell (comma list from repro.cells.available()) adds one stateful
+# point per NON-lstm cell at its plan defaults, keyed
+# "stateful[<cell>@<backend>@<residency>]" with both parts resolved (gru/
+# rglru resolve to xla@host — no fused kernel); "lstm" in the list is a
+# no-op because the default scenarios ARE the lstm points, so every
+# pre-v6 key (and its numbers) is byte-identical for a given config.
+SCHEMA_VERSION = 6
 
 STATEFUL_BACKENDS = ("ref", "xla", "pallas")
 STATE_RESIDENCIES = ("auto", "host", "device")
@@ -187,13 +193,22 @@ def _row(name, summary):
 
 def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
         stateful_backends=None, fault_rate: float = 0.0,
-        chaos: bool = False, replicas=None, state_residencies=None):
+        chaos: bool = False, replicas=None, state_residencies=None,
+        cell_axis=None):
     """Measure the stateless scenario plus one stateful scenario per
     requested engine x state residency (under the seeded chaos axes when
-    requested) and one cluster scenario per requested replica count;
-    write the JSON payload and return the CSV-ish rows the benchmark
-    harness prints."""
+    requested), one cluster scenario per requested replica count, and one
+    plan-default stateful point per requested non-lstm cell; write the
+    JSON payload and return the CSV-ish rows the benchmark harness
+    prints."""
+    import dataclasses
+
     import repro
+    from repro import cells as cell_registry
+    for c in (cell_axis or ()):
+        if c not in cell_registry.available():
+            raise SystemExit(f"unknown cell {c!r}; "
+                             f"choose from {cell_registry.available()}")
     sess = repro.build().quantize()     # the paper's default configuration
     backends = tuple(stateful_backends) if stateful_backends \
         else (sess.plan["stateful_backend"],)
@@ -245,10 +260,33 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
                 sess, n_replicas=n, n_streams=128, windows_per_stream=16,
                 batch=32)
 
+    # The cell axis: one stateful point per non-lstm cell at its OWN plan
+    # defaults (backend/residency resolved by the registry — gru/rglru
+    # have no fused kernel, so they land on xla@host).  "lstm" is skipped:
+    # the scenarios above already measure it under the pre-v6 keys, which
+    # must stay byte-identical.
+    for c in (cell_axis or ()):
+        if c == "lstm":
+            continue
+        sess_c = repro.build(
+            dataclasses.replace(sess.model, cell=c)).quantize()
+        key = (f"stateful[{c}@{sess_c.plan['stateful_backend']}"
+               f"@{sess_c.plan['state_residency']}]")
+        if smoke:
+            scenarios[key] = _scenario_stateful(
+                sess_c, n_streams=8, windows_per_stream=4, batch=8,
+                fault_rate=fault_rate, chaos=chaos)
+        else:
+            scenarios[key] = _scenario_stateful(
+                sess_c, n_streams=64, windows_per_stream=8, batch=32,
+                fault_rate=fault_rate, chaos=chaos)
+        scenarios[key]["cell"] = c
+
     payload = {
         "suite": "serving",
         "schema_version": SCHEMA_VERSION,
         "smoke": smoke,
+        "cells": list(cell_axis or ()),
         "chaos": {"fault_rate": float(fault_rate), "chaos": bool(chaos)},
         "paper": {"samples_per_s": PAPER_SAMPLES_PER_S,
                   "gops_per_watt": PAPER_GOPS_PER_WATT},
@@ -264,12 +302,13 @@ def run(smoke: bool = False, out_path: str = "BENCH_serving.json",
 
 def main(argv):
     """CLI: ``[--smoke] [--stateful-backend ref,xla,pallas]
-    [--state-residency auto,host,device] [--fault-rate F] [--chaos]
-    [--replicas 1,2,4] [out.json]``."""
+    [--state-residency auto,host,device] [--cell lstm,gru,rglru]
+    [--fault-rate F] [--chaos] [--replicas 1,2,4] [out.json]``."""
     smoke = "--smoke" in argv
     chaos = "--chaos" in argv
     stateful_backends = None
     state_residencies = None
+    cell_axis = None
     fault_rate = 0.0
     replicas = None
     paths = []
@@ -289,6 +328,12 @@ def main(argv):
                 raise SystemExit(
                     "--state-residency needs a comma list of "
                     f"{','.join(STATE_RESIDENCIES)}")
+        elif a == "--cell" or a.startswith("--cell="):
+            val = a.split("=", 1)[1] if "=" in a else next(it, "")
+            cell_axis = [c for c in val.split(",") if c]
+            if not cell_axis:
+                raise SystemExit("--cell needs a comma list of registered "
+                                 "cells (see repro.cells.available())")
         elif a == "--fault-rate" or a.startswith("--fault-rate="):
             val = a.split("=", 1)[1] if "=" in a else next(it, "")
             try:
@@ -315,7 +360,7 @@ def main(argv):
     rows = run(smoke=smoke, out_path=paths[0] if paths
                else "BENCH_serving.json", stateful_backends=stateful_backends,
                fault_rate=fault_rate, chaos=chaos, replicas=replicas,
-               state_residencies=state_residencies)
+               state_residencies=state_residencies, cell_axis=cell_axis)
     print("name,us_per_call,derived")
     for n, us, d in rows:
         print(f"{n},{us:.2f},{d}")

@@ -39,13 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import backends
+from repro import backends, cells
 from repro.core import fixed_point as fxp
 from repro.core.accelerator import (AcceleratorConfig, plan as resolve_plan,
                                     resolve_model, sync_accelerator)
 from repro.core.energy import power_report
-from repro.core.qlstm import (QLSTMConfig, forward_float, forward_qat,
-                              init_params, ops_per_inference, quantize_params)
+from repro.core.qlstm import QLSTMConfig
 
 Array = jax.Array
 Params = Dict[str, Any]
@@ -102,6 +101,9 @@ class Accelerator:
         # of truth; legacy model-side knobs are honoured with a warning.
         self.model = resolve_model(model, accel)
         self.accel = sync_accelerator(self.model, accel)
+        # The cell spec owns every datapath and the param/state trees;
+        # KeyError here (unknown cell id) fails the build immediately.
+        self.cell = cells.get(self.model.cell)
         self.plan = resolve_plan(self.model, self.accel)
         if self.accel.backend != "auto":
             # Fail at build, not first infer: an explicit engine that cannot
@@ -109,8 +111,8 @@ class Accelerator:
             # report() as if it could.
             backends.select(self.model, self.accel)
         self.params: Params = (params if params is not None
-                               else init_params(self.model,
-                                                jax.random.key(seed)))
+                               else self.cell.init_params(
+                                   self.model, jax.random.key(seed)))
         self.qparams: Optional[Params] = None
         self.train_summary: Optional[Dict[str, Any]] = None
         self._jitted: Dict[Tuple[str, str], Any] = {}
@@ -144,6 +146,8 @@ class Accelerator:
         state = {"params": self.params,
                  "opt": init_opt_state(self.params, opt_cfg),
                  "step": jnp.zeros((), jnp.int32)}
+
+        forward_qat = self.cell.forward_qat
 
         @jax.jit
         def step_fn(state, batch_d):
@@ -179,7 +183,7 @@ class Accelerator:
     def quantize(self) -> "Accelerator":
         """Float master weights -> integer codes for the hardware datapath
         (weights in (a,b); biases at the wide accumulator precision)."""
-        self.qparams = quantize_params(self.params, self.model)
+        self.qparams = self.cell.quantize_params(self.params, self.model)
         # Cached int-path closures (stateless AND stateful) captured the
         # previous codes; drop them.
         self._jitted = {k: fn for k, fn in self._jitted.items()
@@ -213,12 +217,12 @@ class Accelerator:
         return self._fn(path, backend)
 
     def init_state(self, batch: int):
-        """The reset cross-window carry for ``compiled_stateful``: per-layer
-        zero (h, c) int32 codes of shape (batch, hidden) — what the
-        accelerator's state registers hold before a stream's first
-        window."""
-        from repro.core.qlstm import init_int_state
-        return init_int_state(self.model, batch)
+        """The reset cross-window carry for ``compiled_stateful``: per
+        layer, the cell spec's ``state_arity`` zero int32 code arrays of
+        shape (batch, hidden) — what the accelerator's state registers
+        hold before a stream's first window (for ``cell='lstm'`` this is
+        the classic per-layer (h, c) pair)."""
+        return cells.init_state(self.model, batch)
 
     def compiled_stateful(self, backend: Optional[str] = None):
         """The cached jitted STATEFUL int-path entry point: a callable
@@ -252,17 +256,18 @@ class Accelerator:
 
     def init_state_table(self, max_slots: int) -> Array:
         """The reset DEVICE-RESIDENT state table for
-        ``compiled_stateful_slots``: a zero ``(max_slots + 2, L, 2, H)``
-        int32 array (axis 2 is (h, c)), committed to this session's device
-        when the session is pinned (``replicate``).  Rows ``max_slots``
-        and ``max_slots + 1`` are the conventions of the slot kernel: the
-        always-zero RESET row fresh/evicted streams gather from, and the
-        write-only TRASH row retired/padding rows scatter to
-        (``kernels/qlstm_cell.qlstm_seq_slot_pallas``)."""
+        ``compiled_stateful_slots``: a zero ``(max_slots + 2, L, S, H)``
+        int32 array where ``(L, S, H)`` is the cell's
+        ``plan()['state_shape']`` (axis 2 is the carry arity — (h, c) for
+        the LSTM, a single h row for GRU/rGLRU), committed to this
+        session's device when the session is pinned (``replicate``).
+        Rows ``max_slots`` and ``max_slots + 1`` are the conventions of
+        the slot kernel: the always-zero RESET row fresh/evicted streams
+        gather from, and the write-only TRASH row retired/padding rows
+        scatter to (``kernels/qlstm_cell.qlstm_seq_slot_pallas``)."""
         if max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {max_slots}")
-        tbl = jnp.zeros((max_slots + 2, self.model.num_layers, 2,
-                         self.model.hidden_size), jnp.int32)
+        tbl = jnp.zeros((max_slots + 2, *self.plan["state_shape"]), jnp.int32)
         return jax.device_put(tbl, self.device) if self.device is not None \
             else tbl
 
@@ -368,11 +373,11 @@ class Accelerator:
             return self._jitted[key]
 
         if path == "float":
-            params = self.params
-            fn = jax.jit(lambda x: forward_float(params, x, model))
+            params, fwd = self.params, self.cell.forward_float
+            fn = jax.jit(lambda x: fwd(params, x, model))
         elif path == "qat":
-            params = self.params
-            fn = jax.jit(lambda x: forward_qat(params, x, model))
+            params, fwd = self.params, self.cell.forward_qat
+            fn = jax.jit(lambda x: fwd(params, x, model))
         else:
             qparams, accel = self.qparams, self.accel
 
@@ -417,7 +422,7 @@ class Accelerator:
                batch: int = 1) -> Dict[str, Any]:
         """Resolved plan + op/footprint accounting + the Table-4-style
         energy report at the given operating point."""
-        ops = ops_per_inference(self.model)
+        ops = self.cell.ops_per_inference(self.model)
         energy = power_report(
             flops=ops * batch, hbm_bytes=self.plan["weight_bytes"],
             ici_bytes=0, latency_s=latency_s,

@@ -1,20 +1,24 @@
-"""Backend-dispatch registry for the quantised-LSTM accelerator datapath.
+"""Backend-dispatch registry for the quantised recurrent accelerator
+datapath — cell-agnostic: each engine serves whatever cell the model's
+``repro.cells`` spec names (LSTM, GRU, rGLRU).
 
 Every execution engine behind ``Accelerator.infer``/``Accelerator.serve``
 lives here; nothing outside this package imports ``forward_int`` or
 ``qlstm_seq_pallas`` directly.  Three engines are registered:
 
-  * ``ref``    — the bit-exact pure-jnp oracle (`kernels/ref.py`): two
-                 explicit matmuls per step, pipelined (late-rounding) ALU
-                 with the hard activations.  The specification the other
-                 two must match bit-for-bit.
+  * ``ref``    — the bit-exact pure-jnp oracle (`kernels/ref.py`, via the
+                 cell spec's ``ref_layer``): explicit matmuls per step,
+                 pipelined (late-rounding) ALU with the hard activations.
+                 The specification the other two must match bit-for-bit.
   * ``pallas`` — the fused TPU kernel (`kernels/qlstm_cell.py`): weights
                  VMEM-resident, double-buffered input DMA, MXU or VPU
-                 compute.  Pipelined ALU + hard activations only.
-  * ``xla``    — the ``lax.scan`` datapath (`core/qlstm.forward_int`):
-                 supports every Table-2 point including the per-step
-                 (non-pipelined, baseline [15]) ALU and the 256-entry LUT
-                 activations.
+                 compute.  Pipelined ALU + hard activations, and only for
+                 cells with a fused kernel (today the LSTM; GRU/rGLRU
+                 resolve to ``xla``).
+  * ``xla``    — the ``lax.scan`` datapath (the cell spec's
+                 ``run_int_stateful``): supports every Table-2 point of
+                 every cell, including the per-step (non-pipelined,
+                 baseline [15]) ALU and the 256-entry LUT activations.
 
 Selection is plan-driven (``core/accelerator.resolve_backend``): ``auto``
 picks ``pallas`` when the configuration fits the fused kernel, else
@@ -27,12 +31,14 @@ A backend exposes
   layer(x_int, w_x, w_h, b_wide, model, accel)    # one layer, time-major
   supports(model, accel) -> Optional[str]         # None = ok, else reason
 
-and, when it can carry LSTM (h, c) state across calls (the
+and, when it can carry recurrent state across calls (the
 ``repro.serving`` stateful-streaming contract),
 
   run_stateful(qparams, x_int, model, accel, state) -> (y_int, new_state)
 
-where ``state`` is ``core.qlstm.IntState`` (per-layer (h, c) int32 codes).
+where ``state`` is the cell's carry: per layer, a tuple of
+``state_arity`` int32 ``(B, H)`` code arrays (the LSTM's (h, c) is the
+arity-2 instance; ``repro.cells.init_state`` builds the reset carry).
 All three engines implement it — the fused ``pallas`` kernel seeds its
 (h, c) VMEM scratch from the carried state and returns the final state —
 so stateful selection (``select_stateful``, following the plan's
@@ -46,7 +52,7 @@ engine may additionally expose
                      table, gather_slots, scatter_slots)
       -> (y_int, new_table)
 
-where ``table`` is the persistent ``(n_slots + 2, L, 2, H)`` int32 state
+where ``table`` is the persistent ``(n_slots + 2, L, S, H)`` int32 state
 table and the slot vectors are per-batch-row table-row ids (the contract
 of ``kernels/qlstm_cell.qlstm_seq_slot_pallas``).  The ``pallas`` engine
 gathers/scatters inside the fused kernel; ``ref`` and ``xla`` use the
@@ -145,14 +151,14 @@ def _stateful_reason(backend: Backend, model: QLSTMConfig,
     if reason is not None:
         return reason
     if backend.run_stateful is None:
-        return ("no stateful entry point (the engine cannot carry (h, c) "
+        return ("no stateful entry point (the engine cannot carry state "
                 "across windows)")
     return None
 
 
 def select_stateful(model: QLSTMConfig, accel: AcceleratorConfig,
                     override: Optional[str] = None) -> Backend:
-    """Resolve a backend able to carry (h, c) state across windows.
+    """Resolve a backend able to carry recurrent state across windows.
 
     Same contract as :func:`select`, but ``auto`` follows the plan's
     ``stateful_backend`` — currently identical to the stateless choice,
@@ -174,7 +180,7 @@ def select_stateful(model: QLSTMConfig, accel: AcceleratorConfig,
 def stateful_backends(model: QLSTMConfig,
                       accel: AcceleratorConfig) -> Tuple[str, ...]:
     """Names of every engine able to run the configuration with a carried
-    (h, c) state — the ``repro.serving`` capability surface."""
+    recurrent state — the ``repro.serving`` capability surface."""
     model = resolve_model(model, accel, warn=False)
     return tuple(n for n in available()
                  if _stateful_reason(_REGISTRY[n], model, accel) is None)
@@ -195,7 +201,7 @@ def degradation_ladder(model: QLSTMConfig, accel: AcceleratorConfig,
     engine first, then every other engine capable of this configuration in
     :data:`DEGRADATION_ORDER` (engines registered outside the canonical
     order go last).  ``stateful`` restricts the ladder to engines with a
-    cross-window (h, c) entry point — the ``repro.serving`` case."""
+    cross-window state entry point — the ``repro.serving`` case."""
     first = (select_stateful if stateful else select)(
         model, accel, override=override).name
     capable = (stateful_backends if stateful else supported_backends)(

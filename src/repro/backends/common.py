@@ -19,17 +19,17 @@ Array = jax.Array
 
 def supports_fused(model: QLSTMConfig,
                    accel: AcceleratorConfig) -> Optional[str]:
-    """Both layered engines implement exactly the paper's pipelined datapath
-    with the hard activations (C2+C3).  Anything else is the xla engine's
-    job."""
-    if model.alu_mode != "pipelined":
-        return (f"alu_mode={model.alu_mode!r}: only the pipelined "
-                "(late-rounding) ALU is implemented")
-    if model.acts.gate != "hard_sigmoid_star":
-        return f"gate activation {model.acts.gate!r}: needs hard_sigmoid_star"
-    if model.acts.cell != "hard_tanh":
-        return f"cell activation {model.acts.cell!r}: needs hard_tanh"
-    return None
+    """Can the FUSED (Pallas) datapath run this configuration?  Delegates
+    to the cell spec: a cell without a fused kernel
+    (``CellSpec.supports_fused is None`` — GRU, rGLRU today) is refused
+    outright; a cell with one (LSTM) applies its own predicate — the
+    paper's pipelined datapath with the hard activations (C2+C3).
+    Anything refused here is the xla engine's job."""
+    from repro import cells  # lazy: avoids the cells -> kernels -> backends cycle
+    spec = cells.get(model.cell)
+    if spec.supports_fused is None:
+        return f"cell {model.cell!r} has no fused kernel"
+    return spec.supports_fused(model, accel)
 
 
 def dense_head(h_last: Array, qparams, model: QLSTMConfig) -> Array:
@@ -58,25 +58,28 @@ def run_slots_via_state(run_stateful: Callable, qparams, x_int: Array,
                         table: Array, gather_slots: Array,
                         scatter_slots: Array):
     """Generic ``run_stateful_slots`` for engines without an in-kernel slot
-    path: gather the per-layer (h, c) batch from the state table, run the
+    path: gather the per-layer carry batch from the state table, run the
     engine's ``run_stateful``, scatter the new carry back — all in jnp, so
     under jit the table never leaves the device even though the engine
     itself only understands dense state.  This keeps every rung of the
     serving degradation ladder device-resident: falling back from the
     fused pallas kernel to ``xla``/``ref`` changes latency, never where
-    the state lives.
+    the state lives.  The carry arity is read off the table itself
+    (``table.shape == (slots + 2, L, S, H)``), so the adapter serves every
+    registered cell — LSTM's ``S == 2`` (h, c) and the single-array GRU /
+    rGLRU carries alike.
 
     Same table contract as ``kernels/qlstm_cell.qlstm_seq_slot_pallas``
     (rows ``n_slots``/``n_slots + 1`` are the ZERO/TRASH slots); returns
     ``(y_int, new_table)``."""
-    nl = model.num_layers
-    state = tuple((jnp.take(table[:, li, 0, :], gather_slots, axis=0),
-                   jnp.take(table[:, li, 1, :], gather_slots, axis=0))
+    nl, arity = table.shape[1], table.shape[2]
+    state = tuple(tuple(jnp.take(table[:, li, s, :], gather_slots, axis=0)
+                        for s in range(arity))
                   for li in range(nl))
     y_int, new_state = run_stateful(qparams, x_int, model, accel, state)
-    for li, (h, c) in enumerate(new_state):
-        table = table.at[scatter_slots, li, 0, :].set(h)
-        table = table.at[scatter_slots, li, 1, :].set(c)
+    for li, layer_carry in enumerate(new_state):
+        for s, arr in enumerate(layer_carry):
+            table = table.at[scatter_slots, li, s, :].set(arr)
     return y_int, table
 
 

@@ -1,20 +1,26 @@
 """``ref`` backend — the bit-exact pure-jnp oracle (`kernels/ref.py`).
 
-Two explicit int32 matmuls per cell step, single late rounding (S5), hard
-activations.  This is the specification: the pallas engine must match it
-bit-for-bit (`tests/test_api.py`, `tests/test_kernels.py`)."""
+Explicit int32 matmuls per cell step, single late rounding (S5), hard
+activations.  This is the specification: the general (xla) datapath of
+every registered cell — and, for the LSTM, the fused pallas engine — must
+match it bit-for-bit (`tests/test_api.py`, `tests/test_kernels.py`,
+`tests/test_cells.py`).  The whole-model run stacks the cell spec's
+``ref_layer`` (time-major oracle layer) and finishes with the shared
+dense head.
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.backends import Backend, register
-from repro.backends.common import (run_layered, run_layered_stateful,
-                                   run_slots_via_state, supports_fused)
+from repro.backends.common import dense_head, run_slots_via_state
 from repro.core.accelerator import AcceleratorConfig
-from repro.core.qlstm import QLSTMConfig
+from repro.core.qlstm import QLSTMConfig, check_int_state
 from repro.kernels import ref as _ref
 
 Array = jax.Array
@@ -22,7 +28,11 @@ Array = jax.Array
 
 def layer(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
           model: QLSTMConfig, accel: AcceleratorConfig) -> Array:
-    """One LSTM layer, time-major: (T, B, M) codes -> (T, B, H) codes."""
+    """One LSTM layer, time-major: (T, B, M) codes -> (T, B, H) codes.
+
+    Kept with the historical fused-LSTM signature — ``kernels/ops.
+    qlstm_seq`` dispatches single layers through ``Backend.layer``; other
+    cells go through :func:`run` / ``CellSpec.ref_layer``."""
     acts = model.acts
     return _ref.qlstm_seq_ref(
         x_int, w_x, w_h, b_wide, model.fxp,
@@ -30,16 +40,10 @@ def layer(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
         ht_min=acts.ht_min, ht_max=acts.ht_max)
 
 
-def run(qparams, x_int: Array, model: QLSTMConfig,
-        accel: AcceleratorConfig) -> Array:
-    """Whole model, batch-major: (B, T, M) codes -> (B, P) codes."""
-    return run_layered(layer, qparams, x_int, model, accel)
-
-
 def layer_stateful(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
                    model: QLSTMConfig, accel: AcceleratorConfig,
                    h0: Array, c0: Array):
-    """One layer resumed from a carried (h0, c0): (T, B, M) codes ->
+    """One LSTM layer resumed from a carried (h0, c0): (T, B, M) codes ->
     ((T, B, H) codes, (h_last, c_last))."""
     acts = model.acts
     return _ref.qlstm_seq_ref(
@@ -49,15 +53,43 @@ def layer_stateful(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
         h0=h0, c0=c0, return_state=True)
 
 
+def supports(model: QLSTMConfig, accel: AcceleratorConfig) -> Optional[str]:
+    """The oracle engine covers whatever the cell's ref oracle covers —
+    for every current cell, exactly the paper's pipelined datapath with
+    the hard activations."""
+    from repro import cells  # lazy: avoids the cells -> kernels -> backends cycle
+    return cells.get(model.cell).supports_oracle(model, accel)
+
+
 def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
                  accel: AcceleratorConfig, state):
-    """Whole model with cross-window (h, c) carry — (y_int, new_state)."""
-    return run_layered_stateful(layer_stateful, qparams, x_int, model, accel,
-                                state)
+    """Whole model with an explicit cross-window carry: stack the cell's
+    oracle layer over the carry tuple, then the shared dense head —
+    ``(y_int, new_state)``."""
+    from repro import cells
+    spec = cells.get(model.cell)
+    check_int_state(state, qparams)
+    h_t = jnp.swapaxes(x_int, 0, 1).astype(jnp.int32)   # time-major (T, B, M)
+    new_state = []
+    for p, carry in zip(qparams["layers"], state):
+        h_t, carry = spec.ref_layer(h_t, p, model, carry)
+        h_t = h_t.astype(jnp.int32)
+        new_state.append(tuple(carry))
+    return dense_head(h_t[-1], qparams, model), tuple(new_state)
+
+
+def run(qparams, x_int: Array, model: QLSTMConfig,
+        accel: AcceleratorConfig) -> Array:
+    """Whole model, batch-major: (B, T, M) codes -> (B, P) codes — the
+    stateful oracle started from the zero reset carry."""
+    from repro import cells
+    y, _ = run_stateful(qparams, x_int, model, accel,
+                        cells.init_state(model, x_int.shape[0]))
+    return y
 
 
 BACKEND = register(Backend(
-    name="ref", run=run, supports=supports_fused, layer=layer,
+    name="ref", run=run, supports=supports, layer=layer,
     run_stateful=run_stateful,
     # Device-resident state via the XLA-level gather/scatter adapter — the
     # oracle rung of the serving ladder keeps the carry on the device too.

@@ -1,11 +1,13 @@
-"""``xla`` backend — the ``lax.scan`` integer datapath
-(`core/qlstm.forward_int`).
+"""``xla`` backend — the ``lax.scan`` general integer datapath of
+whatever cell the model names (``repro.cells``; the LSTM instance is
+`core/qlstm.forward_int`).
 
-The most general engine: every Table-2 point runs here, including the
-non-pipelined per-step ALU (Algorithm 1 as printed — the baseline [15]
-datapath) and the 256-entry LUT Sigmoid/Tanh activations.  For pipelined
-configurations with hard activations it is bit-identical to the ``ref`` and
-``pallas`` engines."""
+The most general engine: every Table-2 point of every registered cell
+runs here, including the non-pipelined per-step ALU (Algorithm 1 as
+printed — the baseline [15] datapath) and the 256-entry LUT Sigmoid/Tanh
+activations.  For pipelined configurations with hard activations it is
+bit-identical to the ``ref`` oracle (and, for the LSTM, the ``pallas``
+engine)."""
 
 from __future__ import annotations
 
@@ -17,34 +19,33 @@ import jax
 from repro.backends import Backend, register
 from repro.backends.common import run_slots_via_state
 from repro.core.accelerator import AcceleratorConfig
-from repro.core.qlstm import QLSTMConfig, forward_int, forward_int_stateful
+from repro.core.qlstm import QLSTMConfig
 
 Array = jax.Array
 
-_GATES = ("hard_sigmoid_star", "lut_sigmoid", "sigmoid")
-_CELLS = ("hard_tanh", "lut_tanh", "tanh")
-
 
 def supports(model: QLSTMConfig, accel: AcceleratorConfig) -> Optional[str]:
-    """None when the configuration has an integer datapath here (every
-    Table-2 point does), else the reason it cannot run."""
-    if model.acts.gate not in _GATES:
-        return f"gate activation {model.acts.gate!r} has no integer datapath"
-    if model.acts.cell not in _CELLS:
-        return f"cell activation {model.acts.cell!r} has no integer datapath"
-    return None
+    """None when the cell's general integer datapath covers the
+    configuration (every Table-2 point does, for every registered cell),
+    else the reason it cannot run."""
+    from repro import cells  # lazy: avoids the cells -> kernels -> backends cycle
+    return cells.get(model.cell).supports_int(model, accel)
 
 
 def run(qparams, x_int: Array, model: QLSTMConfig,
         accel: AcceleratorConfig) -> Array:
     """Whole model, batch-major: (B, T, M) codes -> (B, P) codes."""
-    return forward_int(qparams, x_int, model)
+    from repro import cells
+    return cells.get(model.cell).run_int(qparams, x_int, model)
 
 
 def run_stateful(qparams, x_int: Array, model: QLSTMConfig,
                  accel: AcceleratorConfig, state):
-    """Whole model with cross-window (h, c) carry — (y_int, new_state)."""
-    return forward_int_stateful(qparams, x_int, model, state)
+    """Whole model with an explicit cross-window carry — the cell spec's
+    ``run_int_stateful``; returns (y_int, new_state)."""
+    from repro import cells
+    return cells.get(model.cell).run_int_stateful(qparams, x_int, model,
+                                                  state)
 
 
 BACKEND = register(Backend(

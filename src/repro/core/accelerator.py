@@ -196,37 +196,42 @@ def sync_accelerator(model: QLSTMConfig,
                                ht_min=m.acts.ht_min, ht_max=m.acts.ht_max)
 
 
+def weight_bytes(model: QLSTMConfig, acc: AcceleratorConfig) -> int:
+    """Bytes of quantised weights+biases the accelerator must hold, for
+    whatever cell ``model.cell`` names (dispatched through the
+    ``repro.cells`` registry)."""
+    # Lazy import: repro.cells -> cells.lstm -> repro.kernels -> this module.
+    from repro import cells
+    return cells.get(model.cell).weight_bytes(model, acc)
+
+
 def lstm_weight_bytes(model: QLSTMConfig, acc: AcceleratorConfig) -> int:
-    """Bytes of quantised weights+biases the accelerator must hold."""
-    itemsize = (acc.fxp.total_bits + 7) // 8
-    wide_itemsize = 2 * itemsize
-    total = 0
-    for li in range(model.num_layers):
-        m, h = model.layer_in_dim(li), model.hidden_size
-        total += (m + h) * 4 * h * itemsize + 4 * h * wide_itemsize
-    total += model.hidden_size * model.out_features * itemsize
-    total += model.out_features * wide_itemsize
-    return total
+    """Back-compat alias of :func:`weight_bytes` (pre-cell-registry name);
+    still correct for every cell, not just LSTM."""
+    return weight_bytes(model, acc)
 
 
 def resolve_weight_memory(model: QLSTMConfig, acc: AcceleratorConfig) -> str:
     """AUTO spill decision (Fig 4/5 analogue)."""
     if acc.weight_memory != "auto":
         return acc.weight_memory
-    return "vmem" if lstm_weight_bytes(model, acc) <= acc.vmem_budget else "hbm"
+    return "vmem" if weight_bytes(model, acc) <= acc.vmem_budget else "hbm"
 
 
 def resolve_backend(model: QLSTMConfig, acc: AcceleratorConfig) -> str:
     """Plan-driven backend choice (the explicit override passes through).
 
-    The fused Pallas kernel implements the paper's pipelined ALU with the
-    hard activations; anything else (per-step ALU baseline, LUT acts) runs
-    on the XLA ``lax.scan`` datapath."""
+    A fused Pallas kernel is used when the model's cell HAS one
+    (``CellSpec.supports_fused`` is set — today only the LSTM) and the
+    configuration is the point it implements (the paper's pipelined ALU
+    with the hard activations); anything else (per-step ALU baseline, LUT
+    acts, GRU/rGLRU cells) runs on the XLA ``lax.scan`` datapath."""
     if acc.backend != "auto":
         return acc.backend
-    fused_ok = (model.alu_mode == "pipelined"
-                and model.acts.gate == "hard_sigmoid_star"
-                and model.acts.cell == "hard_tanh")
+    from repro import cells  # lazy: repro.cells imports this module
+    spec = cells.get(model.cell)
+    fused_ok = (spec.supports_fused is not None
+                and spec.supports_fused(model, acc) is None)
     return "pallas" if fused_ok else "xla"
 
 
@@ -248,8 +253,8 @@ def resolve_stateful_backend(model: QLSTMConfig,
 
 def resolve_state_residency(model: QLSTMConfig,
                             acc: AcceleratorConfig) -> str:
-    """Where the serving tier keeps per-stream (h, c) carries:
-    ``device`` | ``host``.
+    """Where the serving tier keeps per-stream carries (the cell's
+    ``(state_arity, hidden)`` rows per layer): ``device`` | ``host``.
 
     The fused Pallas kernel owns an in-kernel slot gather/scatter path
     (``kernels/qlstm_cell.qlstm_seq_slot_pallas``), so when it is the
@@ -269,11 +274,18 @@ def plan(model: QLSTMConfig, acc: AcceleratorConfig) -> Dict:
 
     Returned dict drives backend dispatch and the energy/footprint report —
     the TPU analogue of the paper's Vivado configuration point."""
+    from repro import cells  # lazy: repro.cells imports this module
     model = resolve_model(model, acc, warn=False)
     acc = sync_accelerator(model, acc)
     wmem = resolve_weight_memory(model, acc)
-    wbytes = lstm_weight_bytes(model, acc)
+    wbytes = weight_bytes(model, acc)
     return {
+        # Which recurrent cell the datapath runs, and the per-stream carry
+        # shape (num_layers, state_arity, hidden) its spec declares —
+        # serving keys every state table on this, never on a hardcoded
+        # LSTM (L, 2, H).
+        "cell": model.cell,
+        "state_shape": cells.state_shape(model),
         "compute_unit": acc.compute_unit,
         "weight_memory": wmem,
         "weight_bytes": wbytes,

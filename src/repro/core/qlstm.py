@@ -77,6 +77,11 @@ class QLSTMConfig:
     acts: ActivationConfig = PAPER_ACTS
     fxp: FixedPointConfig = FXP_4_8   # DEPRECATED -> AcceleratorConfig.fxp
     alu_mode: str = "pipelined"   # DEPRECATED -> AcceleratorConfig.alu_mode
+    # Which quantised recurrent cell the accelerator runs: any id in the
+    # ``repro.cells`` registry ("lstm" | "gru" | "rglru").  The cell spec
+    # owns the param tree, the state shape, and the datapaths; everything
+    # downstream (backends, serving, explorer) is cell-agnostic.
+    cell: str = "lstm"
 
     def layer_in_dim(self, layer: int) -> int:
         return self.input_size if layer == 0 else self.hidden_size
@@ -285,6 +290,16 @@ def _elem_mul_round(a_int, b_int, cfg: QLSTMConfig):
     fp = cfg.fxp
     prod = fxp.product_config(fp, fp)
     return fxp.requantize(a_int.astype(jnp.int32) * b_int.astype(jnp.int32), prod, fp)
+
+
+# Public aliases of the integer datapath primitives, shared by the other
+# quantised cells in ``repro.cells`` (GRU, rGLRU): one MAC (both ALU
+# modes) and one set of integer activations for the whole cell zoo, so
+# the S5 rounding contract cannot drift between cells.
+int_gate_act = _int_gate_act
+int_cell_act = _int_cell_act
+int_mac = _int_mac
+elem_mul_round = _elem_mul_round
 
 
 def _cell_step_int(p, x_t, h, c, cfg: QLSTMConfig):

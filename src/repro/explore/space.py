@@ -5,7 +5,9 @@ tuple of candidate values and a configuration *point* is one value per axis.
 The axes are exactly the knobs the paper sweeps by rebuilding the bitstream
 (fixed-point format, HardSigmoid* method, ALU resource type, ALU pipelining)
 plus the deployment-side parameters the TPU re-expression adds (layer
-width/depth, serve batch size, execution backend).
+width/depth, serve batch size, execution backend) and the recurrent cell
+itself (``repro.cells``: lstm | gru | rglru — the scenario-diversity
+axis).
 
 ``Point.configs()`` turns a point into the ``(QLSTMConfig,
 AcceleratorConfig)`` pair that ``repro.build`` compiles — the search space
@@ -29,7 +31,7 @@ from repro.core.qlstm import QLSTMConfig
 # Axis order is the canonical iteration order of ``grid()`` — stable across
 # runs so sweep artifacts diff cleanly.
 AXES = ("fxp", "hs_method", "compute_unit", "alu_mode",
-        "hidden_size", "num_layers", "batch", "backend")
+        "hidden_size", "num_layers", "batch", "backend", "cell")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +46,9 @@ class Point:
     num_layers: int
     batch: int
     backend: str
+    # The recurrent cell id (last axis; default keeps pre-cell-axis
+    # records and Point(...) call sites valid).
+    cell: str = "lstm"
 
     def configs(self, base_model: Optional[QLSTMConfig] = None,
                 base_accel: Optional[AcceleratorConfig] = None,
@@ -56,7 +61,8 @@ class Point:
         vmem_budget, ht thresholds)."""
         model = dataclasses.replace(base_model or QLSTMConfig(),
                                     hidden_size=self.hidden_size,
-                                    num_layers=self.num_layers)
+                                    num_layers=self.num_layers,
+                                    cell=self.cell)
         accel = dataclasses.replace(base_accel or AcceleratorConfig(),
                                     fxp=self.fxp, hs_method=self.hs_method,
                                     compute_unit=self.compute_unit,
@@ -67,11 +73,15 @@ class Point:
     @property
     def label(self) -> str:
         """Stable human/machine-readable id, e.g.
-        ``a4b8_step_mxu_pipelined_h20x1_b256_auto``."""
-        return (f"a{self.fxp.frac_bits}b{self.fxp.total_bits}_"
+        ``a4b8_step_mxu_pipelined_h20x1_b256_auto`` (non-LSTM cells get
+        a ``_gru``/``_rglru`` suffix; LSTM labels are unchanged from the
+        pre-cell-axis era so existing sweep artifacts still diff
+        cleanly)."""
+        base = (f"a{self.fxp.frac_bits}b{self.fxp.total_bits}_"
                 f"{self.hs_method}_{self.compute_unit}_{self.alu_mode}_"
                 f"h{self.hidden_size}x{self.num_layers}_b{self.batch}_"
                 f"{self.backend}")
+        return base if self.cell == "lstm" else f"{base}_{self.cell}"
 
     def asdict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -99,6 +109,7 @@ class SearchSpace:
     num_layers: Sequence[int] = (1,)
     batch: Sequence[int] = (256,)
     backend: Sequence[str] = ("auto",)
+    cell: Sequence[str] = ("lstm",)
 
     def __post_init__(self):
         for axis in AXES:
@@ -113,6 +124,8 @@ class SearchSpace:
         _check("compute_unit", self.compute_unit, ("mxu", "vpu"))
         _check("alu_mode", self.alu_mode, ALU_MODES)
         _check("backend", self.backend, BACKENDS)
+        from repro import cells as _cells
+        _check("cell", self.cell, _cells.available())
         for axis in ("hidden_size", "num_layers", "batch"):
             for v in getattr(self, axis):
                 if not isinstance(v, int) or v < 1:
@@ -164,6 +177,9 @@ def point_from_config(config: dict) -> Point:
     kw = dict(config)
     kw["fxp"] = FixedPointConfig(kw["fxp"]["frac_bits"],
                                  kw["fxp"]["total_bits"])
+    # Records written before the cell axis existed have no "cell" key —
+    # they were all LSTM points.
+    kw.setdefault("cell", "lstm")
     return Point(**{a: kw[a] for a in AXES})
 
 
@@ -184,8 +200,11 @@ def paper_space(batch: int = 256) -> SearchSpace:
                        batch=(batch,))
 
 
-def smoke_space(batch: int = 32) -> SearchSpace:
-    """Four cheap CPU-safe points (fixed-point format x ALU mode) — the
-    deterministic sweep CI runs and tests assert on."""
+def smoke_space(batch: int = 32, cell: Sequence[str] = ("lstm",)
+                ) -> SearchSpace:
+    """Four cheap CPU-safe points per cell (fixed-point format x ALU
+    mode) — the deterministic sweep CI runs and tests assert on.  ``cell``
+    widens the sweep across the registered cell zoo (``bench_pareto``
+    passes all three)."""
     return SearchSpace(fxp=(FXP_4_8, FXP_8_16), alu_mode=ALU_MODES,
-                       batch=(batch,))
+                       batch=(batch,), cell=cell)

@@ -72,6 +72,115 @@ def qlstm_seq_ref(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
 
 
 # ---------------------------------------------------------------------------
+# quantised GRU oracle (cells/gru.py general datapath must match bit-exact)
+# ---------------------------------------------------------------------------
+
+def qgru_seq_ref(x_int: Array, w_x: Array, w_h: Array, b_wide: Array,
+                 cfg: FixedPointConfig,
+                 hs_slope_shift: int = 3, hs_bound: float = 3.0,
+                 ht_min: float = -1.0, ht_max: float = 1.0,
+                 h0: Array = None):
+    """Time-major quantised GRU sequence — pipelined datapath, hard acts.
+
+    x_int:  (T, B, M) integer codes in cfg.
+    w_x:    (M, 3H) codes; w_h: (H, 3H) codes; gate order [r, z, n].
+    b_wide: (3H,) codes at the PRODUCT precision (2a frac bits, int32).
+    h0:     optional (B, H) int32 initial carry (zeros when omitted).
+
+    The candidate's recurrent half ``h W_hn`` exits its own accumulator
+    (one S5 rounding), is gated by ``r`` back to the wide format, added to
+    the 1.0-lifted ``x W_xn + b_n`` half, and rounded once; the state mix
+    ``(1-z)*n + z*h`` likewise rounds once.  Returns
+    ``((T, B, H) int32 hidden codes, h_last)``.
+    """
+    prod = fxp.product_config(cfg, cfg)
+    spec = hard_act.HardSigmoidStarSpec(cfg, hs_slope_shift, hs_bound)
+    _, bsz, _ = x_int.shape
+    hdim = w_h.shape[0]
+    one = 1 << cfg.frac_bits
+
+    def step(h, x_t):
+        rz_acc = (x_t.astype(jnp.int32) @ w_x[:, :2 * hdim].astype(jnp.int32)
+                  + h @ w_h[:, :2 * hdim].astype(jnp.int32)
+                  + b_wide[:2 * hdim].astype(jnp.int32))
+        rz = fxp.requantize(rz_acc, prod, cfg)
+        r = hard_act.hs_star_int_arithmetic(rz[:, :hdim], spec)
+        z = hard_act.hs_star_int_arithmetic(rz[:, hdim:], spec)
+        nh = fxp.requantize(h @ w_h[:, 2 * hdim:].astype(jnp.int32),
+                            prod, cfg)
+        nx = fxp.requantize(
+            x_t.astype(jnp.int32) @ w_x[:, 2 * hdim:].astype(jnp.int32)
+            + b_wide[2 * hdim:].astype(jnp.int32), prod, cfg)
+        n_pre = fxp.requantize(nx * one + r * nh, prod, cfg)
+        n = hard_act.hard_tanh_int(n_pre, cfg, ht_min, ht_max)
+        h_new = fxp.requantize((one - z) * n + z * h, prod, cfg)
+        return h_new, h_new
+
+    h0 = jnp.zeros((bsz, hdim), jnp.int32) if h0 is None \
+        else h0.astype(jnp.int32)
+    h_last, hs = jax.lax.scan(step, h0, x_int.astype(jnp.int32))
+    return hs, h_last
+
+
+# ---------------------------------------------------------------------------
+# quantised RG-LRU oracle (cells/rglru.py general datapath, bit-exact)
+# ---------------------------------------------------------------------------
+
+def qrglru_seq_ref(x_int: Array, w_x: Array, w_a: Array, w_i: Array,
+                   b_x: Array, b_a: Array, b_i: Array, lam_q: Array,
+                   cfg: FixedPointConfig,
+                   hs_slope_shift: int = 3, hs_bound: float = 3.0,
+                   h0: Array = None):
+    """Time-major quantised RG-LRU sequence — pipelined datapath, hard acts.
+
+    x_int:        (T, B, M) integer codes in cfg.
+    w_x/w_a/w_i:  (M, H) codes (value, recurrence-gate, input-gate paths).
+    b_x/b_a/b_i:  (H,) codes at the PRODUCT precision (int32).
+    lam_q:        (H,) codes in cfg — the pre-gated decay parameter
+                  ``quantize(gate(lambda))``, baked at quantisation time.
+    h0:           optional (B, H) int32 initial carry (zeros when omitted).
+
+    The fixed-point redefinition of Griffin's recurrence (input-only
+    gates, ``a = 1 - r*lambda`` decay, convex ``a*h + (1-a)*(i*x)`` mix):
+
+        xp = S5( x W_x + b_x )
+        r  = gate( S5( x W_a + b_a ) )
+        i  = gate( S5( x W_i + b_i ) )
+        a  = 1 - S5( r * lam_q )
+        gx = S5( i * xp )
+        h' = S5( a*h + (1-a)*gx )
+
+    Returns ``((T, B, H) int32 hidden codes, h_last)``.
+    """
+    prod = fxp.product_config(cfg, cfg)
+    spec = hard_act.HardSigmoidStarSpec(cfg, hs_slope_shift, hs_bound)
+    _, bsz, _ = x_int.shape
+    hdim = w_x.shape[1]
+    one = 1 << cfg.frac_bits
+    lam32 = lam_q.astype(jnp.int32)
+
+    def step(h, x_t):
+        x32 = x_t.astype(jnp.int32)
+        xp = fxp.requantize(x32 @ w_x.astype(jnp.int32)
+                            + b_x.astype(jnp.int32), prod, cfg)
+        r = hard_act.hs_star_int_arithmetic(
+            fxp.requantize(x32 @ w_a.astype(jnp.int32)
+                           + b_a.astype(jnp.int32), prod, cfg), spec)
+        i = hard_act.hs_star_int_arithmetic(
+            fxp.requantize(x32 @ w_i.astype(jnp.int32)
+                           + b_i.astype(jnp.int32), prod, cfg), spec)
+        a = one - fxp.requantize(r * lam32, prod, cfg)
+        gx = fxp.requantize(i * xp, prod, cfg)
+        h_new = fxp.requantize(a * h + (one - a) * gx, prod, cfg)
+        return h_new, h_new
+
+    h0 = jnp.zeros((bsz, hdim), jnp.int32) if h0 is None \
+        else h0.astype(jnp.int32)
+    h_last, hs = jax.lax.scan(step, h0, x_int.astype(jnp.int32))
+    return hs, h_last
+
+
+# ---------------------------------------------------------------------------
 # quant_matmul kernel oracle
 # ---------------------------------------------------------------------------
 

@@ -3,7 +3,7 @@
 The paper's deployment story is a single real-time sensor stream (§6:
 32 873 samples/s); this package is the production form of that story —
 many named client streams multiplexed onto one or more ``Accelerator``
-sessions, each stream's LSTM (h, c) carry held across windows, waves
+sessions, each stream's recurrent carry held across windows, waves
 double-buffered against device compute, tail latency bounded by a
 deadline, and the paper's metrics (samples/s, GOP/s/W, latency
 percentiles) measured where the server actually runs.

@@ -1,16 +1,18 @@
 """Device-resident per-stream carry — the slot allocator and state table.
 
 The host-side :class:`~repro.serving.state.StateStore` ships every
-stream's (h, c) codes to the device and back on EVERY wave.  This module
+stream's carry codes to the device and back on EVERY wave.  This module
 is ROADMAP item 1's answer: the carries live in one persistent
-``(max_slots + 2, L, 2, H)`` int32 table ON the accelerator
+``(max_slots + 2, L, S, H)`` int32 table ON the accelerator (``(L, S,
+H)`` is the cell's ``plan()['state_shape']`` — ``S == 2`` (h, c) rows
+for the LSTM, ``S == 1`` for GRU/rGLRU)
 (``Accelerator.init_state_table``), and the host keeps only a
 :class:`SlotAllocator` — an LRU map ``stream_id -> table row`` with
 exactly the hit/miss/eviction accounting of the ``StateStore`` it
 replaces.  Per wave the scheduler ships two (B,) int32 slot-id vectors;
 the kernel (``kernels/qlstm_cell.qlstm_seq_slot_pallas``) gathers each
 row's carry at t == 0 and scatters the final state at t == T-1, so no
-(h, c) array crosses the host/device boundary on the hot path — the
+carry array crosses the host/device boundary on the hot path — the
 paper's state-next-to-compute residency argument, and ELSA's throughput
 lever, applied to serving.
 
@@ -164,7 +166,7 @@ class DeviceStateStore:
         self.capacity = capacity
         self._alloc = SlotAllocator(capacity)
         self._model = session.model
-        #: The persistent (capacity + 2, L, 2, H) int32 carry table.  The
+        #: The persistent (capacity + 2, L, S, H) int32 carry table.  The
         #: serving hot path replaces this reference wholesale after each
         #: wave (:meth:`commit`) — the array itself never visits the host.
         self.table = session.init_state_table(capacity)
@@ -214,16 +216,16 @@ class DeviceStateStore:
     def read_state(self, stream_id: Hashable) -> Optional[StreamState]:
         """Read a stream's carry BACK to the host — the one sanctioned
         host/device state transfer, used only on planned stream movement
-        (``ClusterServer.remove_replica``).  Returns the per-layer
-        ``[(h, c), ...]`` int32 rows, or ``None`` for an unknown
-        stream."""
+        (``ClusterServer.remove_replica``).  Returns per layer a tuple of
+        the cell's ``state_arity`` int32 rows (``[(h, c), ...]`` for the
+        LSTM), or ``None`` for an unknown stream."""
         with self._lock:
             slot = self._alloc.slot_of(stream_id)
             table = self.table
         if slot is None:
             return None
-        row = np.asarray(table[slot])              # (L, 2, H) — one stream
-        return [(row[li, 0].copy(), row[li, 1].copy())
+        row = np.asarray(table[slot])              # (L, S, H) — one stream
+        return [tuple(row[li, s].copy() for s in range(row.shape[1]))
                 for li in range(row.shape[0])]
 
     def seed_state(self, stream_id: Hashable,
@@ -233,8 +235,9 @@ class DeviceStateStore:
         ids the assignment evicted."""
         with self._lock:
             slot, evicted = self._alloc.assign(stream_id)
-            row = jnp.asarray(np.stack([np.stack([h, c]) for h, c in state])
-                              .astype(np.int32))
+            row = jnp.asarray(
+                np.stack([np.stack([np.asarray(a) for a in layer])
+                          for layer in state]).astype(np.int32))
             self.table = self.table.at[slot].set(row)
         return evicted
 
@@ -279,6 +282,6 @@ class DeviceStateStore:
     def __getattr__(self, name):
         raise AttributeError(
             f"DeviceStateStore has no attribute {name!r}; host-store-only "
-            f"surfaces (get/put of (h, c) arrays) do not exist on the "
+            f"surfaces (get/put of carry arrays) do not exist on the "
             f"device path — pin ServingConfig(state_residency='host') for "
             f"host-store semantics")

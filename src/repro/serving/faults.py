@@ -10,7 +10,7 @@ wraps the two surfaces where production faults land —
     latency spikes (a descheduled host thread, a contended device);
   * the **state store** (:meth:`FaultInjector.wrap_state_store`): state
     *loss* (a carry silently dropped, as a crashed replica would) and
-    state *corruption* (bit flips in the stored (h, c) codes).
+    state *corruption* (bit flips in the stored carry codes).
 
 Everything is driven by one ``numpy`` PCG64 generator, so a given
 ``(seed, rates)`` pair injects the exact same schedule every run — chaos
@@ -55,7 +55,7 @@ class FaultConfig:
     guard's timeout path).  ``state_loss_rate``: chance a ``put`` into the
     state store is silently dropped — the stream's next window starts from
     the reset carry exactly like an LRU eviction.  ``state_corrupt_rate``:
-    chance a ``put`` stores bitwise-perturbed (h, c) codes (the stream's
+    chance a ``put`` stores bitwise-perturbed carry codes (the stream's
     id is recorded so tests can exclude it from bit-exactness)."""
 
     wave_fault_rate: float = 0.0
@@ -191,8 +191,8 @@ class FaultInjector:
             return state
         # XOR a low bit of every code: bitwise-plausible corruption that
         # is guaranteed to change the carry.
-        return [(np.bitwise_xor(h, 1), np.bitwise_xor(c, 1))
-                for h, c in state]
+        return [tuple(np.bitwise_xor(np.asarray(a), 1) for a in layer)
+                for layer in state]
 
     # -- reporting -----------------------------------------------------------
 

@@ -1,7 +1,7 @@
 """Consistent-hash stream routing — the cluster's placement invariant.
 
 The scaling story of ``repro.serving.cluster`` rests on ONE invariant:
-every named stream is served by exactly one replica, so its LSTM (h, c)
+every named stream is served by exactly one replica, so its recurrent
 carry stays resident in that replica's :class:`~repro.serving.state.
 StateStore` and never migrates across devices on the hot path (ELSA's
 state-residency argument, applied at cluster scale).  This module is the

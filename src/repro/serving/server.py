@@ -5,8 +5,9 @@ live sensor stream); the ROADMAP scenario is that stream multiplied by
 "millions of users".  This module is the piece between the two: clients
 ``submit`` windows tagged with a stream id, the scheduler groups them into
 fixed-size waves (one static shape for the jitted datapath), and — the part
-the stateless ``Accelerator.serve`` path cannot do — each stream's LSTM
-(h, c) carry survives across its windows, so window *k+1* continues the
+the stateless ``Accelerator.serve`` path cannot do — each stream's
+recurrent carry (whatever shape the model's cell spec declares)
+survives across its windows, so window *k+1* continues the
 recurrence window *k* left off, bit-exactly equal to running the stream's
 concatenated sequence through the accelerator in one shot.
 
@@ -135,7 +136,7 @@ class ServingConfig:
         """Reject contradictory settings at construction time."""
         if self.stateful and self.path != "int":
             raise ValueError(
-                f"stateful serving carries integer (h, c) codes, so it "
+                f"stateful serving carries integer state codes, so it "
                 f"requires path='int' (got path={self.path!r}); set "
                 f"stateful=False for the float/qat paths")
         if self.state_residency not in ("auto", "host", "device"):
@@ -167,7 +168,7 @@ class StreamResult:
     description (every engine of the degradation ladder failed the wave).
     ``state_reset`` flags a window computed from the all-zero reset carry
     although the stream had history (LRU eviction, injected state loss, or
-    a failed wave dropped it) — the prediction is a valid LSTM output, it
+    a failed wave dropped it) — the prediction is a valid model output, it
     just lost the history; silent before, now reported.  ``backend`` names
     the engine that computed the window (None for error rows).
 
@@ -440,8 +441,9 @@ class StreamServer:
             self.states.pop(stream_id)
 
     def read_stream_state(self, stream_id: Hashable):
-        """A host-side copy of a stream's carry (per-layer ``[(h, c),
-        ...]`` int32 rows), or ``None`` when the server holds none.  On a
+        """A host-side copy of a stream's carry (per layer, a tuple of the
+        cell's ``state_arity`` int32 rows — ``[(h, c), ...]`` for the
+        LSTM), or ``None`` when the server holds none.  On a
         device-resident server this is the one sanctioned state read-back,
         meant for PLANNED stream movement (``ClusterServer`` drain) — not
         for the hot path.  Call only with the stream quiescent (no windows
@@ -453,11 +455,12 @@ class StreamServer:
         st = self.states.get(stream_id)
         if st is None:
             return None
-        return [(h.copy(), c.copy()) for h, c in st]
+        return [tuple(a.copy() for a in layer) for layer in st]
 
     def seed_stream_state(self, stream_id: Hashable, state) -> None:
-        """Plant a carry for ``stream_id`` (per-layer ``[(h, c), ...]``
-        int32 rows) as if the server had computed it — the destination
+        """Plant a carry for ``stream_id`` (same per-layer carry-tuple
+        layout ``read_stream_state`` returns) as if the server had
+        computed it — the destination
         half of a warm stream handoff.  The stream's next window continues
         the recurrence from ``state`` with no ``state_reset`` flag.  Any
         streams the insertion LRU-evicts are reconciled exactly like a
@@ -469,7 +472,9 @@ class StreamServer:
                 evicted = set(self.states.seed_state(stream_id, state))
             else:
                 evicted = set(self.states.put(
-                    stream_id, [(h.copy(), c.copy()) for h, c in state]))
+                    stream_id,
+                    [tuple(np.asarray(a).copy() for a in layer)
+                     for layer in state]))
         self._reconcile_evictions(evicted)
 
     def close(self, abandon: bool = False,
@@ -705,31 +710,30 @@ class StreamServer:
                     return
 
     def _gather(self, wave: Wave):
-        """Per-layer (h, c) batch arrays for the wave: stored carries for
-        known streams, the zero reset state for new/evicted streams and
-        padding rows.  Also returns per-slot ``state_reset`` flags: True
-        when a stream WITH HISTORY (seq > 0) found no carry — it was
-        evicted, lost, or dropped by a failed wave, and its result must
-        say so instead of silently continuing from zeros."""
-        model = self._sessions[0].model
-        nl, hidden = model.num_layers, model.hidden_size
-        hs = [np.zeros((self.config.batch, hidden), np.int32)
-              for _ in range(nl)]
-        cs = [np.zeros((self.config.batch, hidden), np.int32)
-              for _ in range(nl)]
+        """Per-layer carry batch arrays for the wave (the cell's
+        ``state_arity`` arrays per layer — (h, c) for the LSTM): stored
+        carries for known streams, the zero reset state for new/evicted
+        streams and padding rows.  Also returns per-slot ``state_reset``
+        flags: True when a stream WITH HISTORY (seq > 0) found no carry —
+        it was evicted, lost, or dropped by a failed wave, and its result
+        must say so instead of silently continuing from zeros."""
+        nl, arity, hidden = self._sessions[0].plan["state_shape"]
+        bufs = [[np.zeros((self.config.batch, hidden), np.int32)
+                 for _ in range(arity)] for _ in range(nl)]
         reset = [False] * len(wave.slots)
         for i, slot in enumerate(wave.slots):
             st = self.states.get(slot.stream_id)
             if st is not None:
-                for li, (h, c) in enumerate(st):
-                    hs[li][i] = h
-                    cs[li][i] = c
+                for li, layer_carry in enumerate(st):
+                    for s, arr in enumerate(layer_carry):
+                        bufs[li][s][i] = arr
             elif slot.seq > 0:
                 reset[i] = True
-        state = tuple((jnp.asarray(hs[li]), jnp.asarray(cs[li]))
-                      for li in range(nl))
+        state = tuple(tuple(jnp.asarray(a) for a in layer)
+                      for layer in bufs)
         self.metrics.count("state_bytes_to_device",
-                           sum(int(h.nbytes + c.nbytes) for h, c in state))
+                           sum(int(a.nbytes) for layer in state
+                               for a in layer))
         return state, reset
 
     def _gather_slots(self, wave: Wave):
@@ -794,9 +798,10 @@ class StreamServer:
         :meth:`_retire`).  Padding rows are dropped (they never touch the
         store); so are carries tombstoned by ``end_stream`` — windows
         submitted before the end must not resurrect the stream's state."""
-        rows = [(np.asarray(h), np.asarray(c)) for h, c in new_state]
+        rows = [tuple(np.asarray(a) for a in layer) for layer in new_state]
         self.metrics.count("state_bytes_from_device",
-                           sum(int(h.nbytes + c.nbytes) for h, c in rows))
+                           sum(int(a.nbytes) for layer in rows
+                               for a in layer))
         evicted_all = set()
         for i, slot in enumerate(wave.slots):
             sid = slot.stream_id
@@ -814,8 +819,8 @@ class StreamServer:
                 # (batch, hidden) wave array in the store for the stream's
                 # lifetime.
                 evicted_all.update(
-                    self.states.put(sid, [(h[i].copy(), c[i].copy())
-                                          for h, c in rows]))
+                    self.states.put(sid, [tuple(a[i].copy() for a in layer)
+                                          for layer in rows]))
         return evicted_all
 
     def _reconcile_evictions(self, evicted: set) -> None:

@@ -1,8 +1,11 @@
-"""Bounded per-stream LSTM carry — the serving layer's state store.
+"""Bounded per-stream recurrent carry — the serving layer's state store.
 
-Each live client stream owns one accelerator carry: per layer, the (h, c)
-int32 code vectors after the stream's last window (``core.qlstm.IntState``,
-one batch row).  The store is a bounded LRU map: the paper's deployment
+Each live client stream owns one accelerator carry: per layer, a tuple
+of the cell's ``state_arity`` int32 code vectors after the stream's last
+window (the LSTM's (h, c) pair, a single h row for GRU/rGLRU — one batch
+row of ``repro.cells.init_state``).  The store itself is shape-agnostic:
+it never inspects the arrays, so one store serves every registered cell.
+The store is a bounded LRU map: the paper's deployment
 target is an embedded device with fixed state memory, and the ROADMAP
 scenario is "millions of users" — so the store must evict, not grow.  An
 evicted stream restarts from the reset state (all-zero carry) on its next
@@ -26,9 +29,10 @@ from typing import Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
-# Per-stream carry: one (h, c) pair of (hidden_size,) int32 code vectors
-# per layer.
-StreamState = List[Tuple[np.ndarray, np.ndarray]]
+# Per-stream carry: per layer, a tuple of the cell's ``state_arity``
+# (hidden_size,) int32 code vectors (2 for the LSTM's (h, c), 1 for
+# GRU/rGLRU).
+StreamState = List[Tuple[np.ndarray, ...]]
 
 
 class StateStore:

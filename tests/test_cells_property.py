@@ -1,0 +1,122 @@
+"""Property tests for the cell registry contract (`repro.cells`).
+
+Random ``(cell, fxp, hs_method, layers, hidden)`` draws must round-trip
+the registry — the declared state shape matches what ``init_state``
+builds and what ``run_int_stateful`` returns, the param tree survives
+quantisation structurally — and keep the int path ref<->xla bit-exact on
+short sequences.  Runs under hypothesis when installed (CI's
+requirements-dev env); skips per-test on a bare interpreter via
+``hypothesis_compat``.  A seeded plain-pytest sample of the same
+properties always runs, so the contract is never entirely unguarded.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro import backends, cells
+from repro.core import fixed_point as fxp
+from repro.core.accelerator import (AcceleratorConfig, HS_METHODS,
+                                    resolve_model)
+from repro.core.fixed_point import FXP_4_8, FXP_8_16, FixedPointConfig
+from repro.core.qlstm import QLSTMConfig
+
+CELLS = ("lstm", "gru", "rglru")
+FXPS = (FXP_4_8, FixedPointConfig(6, 10), FXP_8_16)
+
+
+def _draw_case(cell, fp, hs_method, layers, hidden, seed, t=3):
+    """Build one resolved (model, qparams, x_int) case for a draw."""
+    base = QLSTMConfig(input_size=2, hidden_size=hidden, num_layers=layers,
+                       seq_len=t, out_features=2, cell=cell)
+    accel = AcceleratorConfig(fxp=fp, hs_method=hs_method)
+    m = resolve_model(base, accel, warn=False)
+    spec = cells.get(cell)
+    params = spec.init_params(m, jax.random.key(seed))
+    qp = spec.quantize_params(params, m)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1.0, 1.0, (2, t, 2)).astype(np.float32)
+    x_int = fxp.quantize(jnp.asarray(x), fp)
+    return m, accel, spec, params, qp, x_int
+
+
+def _check_registry_roundtrip(cell, fp, layers, hidden, seed):
+    """State shape and param tree survive the registry round-trip."""
+    m, _, spec, params, qp, x_int = _draw_case(
+        cell, fp, "arithmetic", layers, hidden, seed)
+    assert cells.state_shape(m) == (layers, spec.state_arity, hidden)
+    state = cells.init_state(m, batch=2)
+    assert len(state) == layers
+    assert all(len(layer) == spec.state_arity for layer in state)
+    # Quantisation preserves the tree structure: same layer count, same
+    # per-layer keys, int32 codes throughout the recurrent stack.
+    assert len(qp["layers"]) == len(params["layers"]) == layers
+    for qlayer, flayer in zip(qp["layers"], params["layers"]):
+        assert set(qlayer) >= set(flayer) - {"lam"}
+        for v in qlayer.values():
+            assert jnp.asarray(v).dtype == jnp.int32
+    # The stateful runner returns the declared shape back.
+    y, out = spec.run_int_stateful(qp, x_int, m, state)
+    assert y.shape == (2, m.out_features)
+    assert len(out) == layers
+    for layer in out:
+        assert len(layer) == spec.state_arity
+        for a in layer:
+            assert a.shape == (2, hidden) and a.dtype == jnp.int32
+
+
+def _check_ref_xla_bit_exact(cell, fp, hs_method, layers, hidden, seed):
+    """Short-sequence int path: oracle == general datapath, bit-for-bit."""
+    m, accel, _, _, qp, x_int = _draw_case(
+        cell, fp, hs_method, layers, hidden, seed)
+    y_ref = backends.get("ref").run(qp, x_int, m, accel)
+    y_xla = backends.get("xla").run(qp, x_int, m, accel)
+    np.testing.assert_array_equal(
+        np.asarray(y_ref), np.asarray(y_xla),
+        err_msg=f"{cell} {fp} {hs_method} L{layers} H{hidden} s{seed}")
+
+
+@pytest.mark.property
+@given(st.sampled_from(CELLS), st.sampled_from(FXPS),
+       st.integers(1, 3), st.integers(2, 12), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_registry_roundtrip_property(cell, fp, layers, hidden, seed):
+    _check_registry_roundtrip(cell, fp, layers, hidden, seed)
+
+
+@pytest.mark.property
+@given(st.sampled_from(CELLS), st.sampled_from(FXPS),
+       st.sampled_from(HS_METHODS), st.integers(1, 3), st.integers(2, 10),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_ref_xla_bit_exact_property(cell, fp, hs_method, layers, hidden,
+                                    seed):
+    _check_ref_xla_bit_exact(cell, fp, hs_method, layers, hidden, seed)
+
+
+# -- seeded fallback sample: always runs, hypothesis or not -----------------
+
+@pytest.mark.parametrize("cell", CELLS)
+def test_registry_roundtrip_sampled(cell):
+    rng = np.random.default_rng(hash(cell) % (2 ** 32))
+    for _ in range(4):
+        fp = FXPS[rng.integers(len(FXPS))]
+        _check_registry_roundtrip(cell, fp, int(rng.integers(1, 4)),
+                                  int(rng.integers(2, 13)),
+                                  int(rng.integers(2 ** 16)))
+
+
+@pytest.mark.parametrize("cell", CELLS)
+def test_ref_xla_bit_exact_sampled(cell):
+    rng = np.random.default_rng(hash(cell) % (2 ** 32) + 1)
+    for _ in range(4):
+        fp = FXPS[rng.integers(len(FXPS))]
+        hs = HS_METHODS[rng.integers(len(HS_METHODS))]
+        _check_ref_xla_bit_exact(cell, fp, hs, int(rng.integers(1, 4)),
+                                 int(rng.integers(2, 11)),
+                                 int(rng.integers(2 ** 16)))

@@ -226,6 +226,7 @@ def _cluster(sess, n=3, **kw):
     return ClusterServer(sess.replicate(n), **kw)
 
 
+@pytest.mark.slow
 def test_cluster_routing_invariant_and_bit_exact_carry(sess):
     """THE acceptance property: every stream's windows run on exactly one
     replica (``routed_replica`` constant per stream, equal to the ring's

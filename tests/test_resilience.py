@@ -93,6 +93,8 @@ def _check_partition(sess, xs, rows, inj):
 # The chaos matrix: fault rates x backends (the PR's acceptance scenario)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
+@pytest.mark.chaos
 @pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
 @pytest.mark.parametrize("rate", [0.0, 0.05, 0.2])
 def test_chaos_wave_faults_absorbed_bit_exactly(sess, backend, rate):
@@ -112,6 +114,8 @@ def test_chaos_wave_faults_absorbed_bit_exactly(sess, backend, rate):
         assert f["retries"] >= 1 and f["stream_errors"] == 0
 
 
+@pytest.mark.slow
+@pytest.mark.chaos
 def test_acceptance_64_streams_20pct_faults_on_pallas(sess):
     """The PR's acceptance scenario: 64 streams through the fused pallas
     engine at a 20% per-attempt wave-fault rate — zero crashes, every
@@ -153,6 +157,7 @@ def test_chaos_injection_schedule_is_deterministic():
     assert sa["wave_faults"] == sum(a) and sa["attempts"] == 64
 
 
+@pytest.mark.chaos
 def test_chaos_state_loss_flags_reset_not_silence(sess):
     """Lost carries (a crashed replica): the stream's next window is
     computed from the reset state and MUST come back ``state_reset=True``;
@@ -173,6 +178,7 @@ def test_chaos_state_loss_flags_reset_not_silence(sess):
     assert summary["faults"]["state_resets"] == n_reset
 
 
+@pytest.mark.chaos
 def test_chaos_state_corruption_is_recorded(sess):
     """Corrupted carries are the one fault the server cannot flag (the
     codes are plausible); the injector records the victims so tests can
@@ -518,6 +524,7 @@ def test_submit_rejects_malformed_windows(sess, window, match):
 # Concurrency stress: submit/end_stream churn under chaos
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_concurrent_submit_end_stream_stress(sess):
     """4 client threads x 4 streams each, ending and reviving their
     streams mid-run, under a 5% injected fault rate: no deadlock, no
@@ -623,6 +630,7 @@ def test_wave_timeout_exception_type():
 # Device-resident state under chaos (the slot table's partition contract)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.chaos
 def test_chaos_state_loss_on_device_store(sess):
     """The host-store loss drill replayed against the DEVICE slot table
     (backend=pallas resolves state_residency=device): a committed row
@@ -644,6 +652,7 @@ def test_chaos_state_loss_on_device_store(sess):
     assert t["slot_id_bytes"] > 0
 
 
+@pytest.mark.chaos
 def test_chaos_state_corruption_on_device_store(sess):
     """Corrupted table rows (the device form of put-corruption) are
     recorded by the injector; untouched streams still verify bit-exactly
@@ -661,6 +670,7 @@ def test_chaos_state_corruption_on_device_store(sess):
             np.testing.assert_array_equal(r.y, oracle[q])
 
 
+@pytest.mark.slow
 def test_concurrent_device_store_stress(sess):
     """Satellite acceptance: N client threads churning end_stream against
     the device slot table under injected wave faults AND state loss —

@@ -287,6 +287,7 @@ def test_eviction_with_window_in_flight_keeps_numbering(sess):
         srv.drain(timeout=30)
 
 
+@pytest.mark.slow
 def test_max_results_backpressure_and_abandon(sess):
     """max_results bounds computed-but-unpolled results: with a concurrent
     poller every prediction still arrives; with a stalled consumer,
@@ -424,6 +425,7 @@ def test_stream_server_carry_on_pallas_matches_concatenated(num_layers):
     np.testing.assert_array_equal(by[k - 1], full[0])
 
 
+@pytest.mark.slow
 def test_saturated_stateful_pipeline_does_not_deadlock(sess):
     """One stream, full-wave-only scheduling (deadline_s=None), tiny
     max_pending: a full wave can never assemble (one window per stream per
