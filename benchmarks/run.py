@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m benchmarks.run [table1 table3 table4 fig45 cells pareto serving]
   PYTHONPATH=src python -m benchmarks.run --smoke [out.json]
-  PYTHONPATH=src python -m benchmarks.run --sweep [--smoke] [out.json]
+  PYTHONPATH=src python -m benchmarks.run --sweep [--smoke] \
+      [--strategy=halving --rungs=2 --eta=2] [out.json]
   PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [out.json]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
@@ -15,8 +16,10 @@ path) so CI records the perf trajectory.
 ``--sweep`` runs the design-space exploration (``repro.explore`` over the
 Table-4 space; ``--smoke`` restricts it to the deterministic 4-point CPU
 space) and writes the scored points + Pareto front to ``BENCH_pareto.json``
-(override with a positional path).  Render it with
-``python -m repro.analysis.report --pareto BENCH_pareto.json``.
+(override with a positional path).  ``--strategy=halving`` switches to the
+serving-aware successive-halving search (each point scored by a short real
+server run; schema v2 with per-point operating points).  Render either
+with ``python -m repro.analysis.report --pareto BENCH_pareto.json``.
 """
 
 import json
@@ -66,11 +69,17 @@ def smoke(out_path: str = "BENCH_smoke.json") -> None:
 def sweep(argv) -> None:
     from benchmarks import bench_pareto
     smoke_mode = "--smoke" in argv
+    opts = dict(a[2:].split("=", 1) for a in argv
+                if a.startswith("--") and "=" in a)
     paths = [a for a in argv if not a.startswith("--")]
     payload = bench_pareto.write_sweep(paths[0] if paths
                                        else "BENCH_pareto.json",
                                        smoke=smoke_mode,
-                                       iters=5 if smoke_mode else 20)
+                                       iters=5 if smoke_mode else 20,
+                                       strategy=opts.get("strategy", "full"),
+                                       eta=int(opts.get("eta", 2)),
+                                       rungs=(int(opts["rungs"])
+                                              if "rungs" in opts else None))
     print("name,us_per_call,derived")
     for n, us, d in bench_pareto._rows(payload):
         print(f"{n},{us:.2f},{d}")

@@ -116,14 +116,33 @@ def pareto_table(payload: Dict) -> str:
     """The §Design-space table: one row per swept point, front rows bold.
 
     ``payload`` is the ``BENCH_pareto.json`` schema from
-    ``repro.explore.sweep`` (see tests/test_explore.py)."""
+    ``repro.explore.sweep`` (see tests/test_explore.py).  Serving-aware
+    payloads (schema v2 with a ``scenario``) get SLO columns — tail
+    latency, deadline-miss rate, halving rung — instead of the offline
+    energy/accuracy ones; an eliminated-everything sweep renders its
+    ``front_reason`` instead of a silently empty front."""
     objectives = ", ".join(f"{k} ({v})"
                            for k, v in payload["objectives"].items())
-    out = [f"Objectives: {objectives}.  Front: "
-           f"{len(payload['front'])}/{len(payload['points'])} points.", "",
-           "| config | backend | samples/s | GOP/s | GOP/s/W | total W | "
-           "int-vs-float MSE | weights | front |",
-           "|---|---|---|---|---|---|---|---|---|"]
+    head = (f"Objectives: {objectives}.  Front: "
+            f"{len(payload['front'])}/{len(payload['points'])} points.")
+    if payload.get("constraint"):
+        head += f"  SLO: {payload['constraint']}."
+    if payload.get("scenario"):
+        sc = payload["scenario"]
+        head += (f"  Scenario: {sc.get('name', 'scenario')} "
+                 f"({sc.get('streams')} streams x "
+                 f"{sc.get('windows_per_stream')} windows, "
+                 f"deadline {sc.get('deadline_ms')} ms, "
+                 f"strategy={payload.get('strategy', 'full')}).")
+    out = [head]
+    if not payload["front"] and payload.get("front_reason"):
+        out.append(f"Empty front: {payload['front_reason']}")
+    out.append("")
+    if payload.get("scenario"):
+        return "\n".join(out + _serving_pareto_rows(payload))
+    out += ["| config | backend | samples/s | GOP/s | GOP/s/W | total W | "
+            "int-vs-float MSE | weights | front |",
+            "|---|---|---|---|---|---|---|---|---|"]
     for r in payload["points"]:
         if r["status"] != "ok":
             out.append(f"| {r['label']} | — | {r['status']}: "
@@ -138,6 +157,35 @@ def pareto_table(payload: Dict) -> str:
             f"{m['int_float_mse']:.2e} | {_fmt_bytes(m['weight_bytes'])} | "
             f"{'yes' if r['pareto'] else ''} |")
     return "\n".join(out)
+
+
+def _serving_pareto_rows(payload: Dict) -> list:
+    """The serving-mode rows of :func:`pareto_table`: achieved rate and
+    tail latency against the SLO, plus which halving rung each point was
+    last measured at (non-final rungs ran a truncated scenario)."""
+    out = ["| config | backend | replicas | samples/s | p50 ms | p95 ms | "
+           "p99 ms | miss rate | GOP/s/W | rung | front |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in payload["points"]:
+        if r["status"] != "ok":
+            out.append(f"| {r['label']} | — | {r['status']}: "
+                       f"{r.get('reason', '')[:60]} | | | | | | | | |")
+            continue
+        m = r["metrics"]
+        op = r.get("operating_point") or {}
+        rung = op.get("rung")
+        rung_s = "full" if op.get("final") else (
+            f"r{rung}@{op.get('fraction', 0):g}" if rung is not None else "—")
+        gpw = m.get("gops_per_watt")
+        b = "**" if r["pareto"] else ""
+        out.append(
+            f"| {b}{r['label']}{b} | {r['plan']['backend']} | "
+            f"{r['plan'].get('replicas', 1)} | {m['samples_per_s']:,.0f} | "
+            f"{m['p50_ms']:.2f} | {m['p95_ms']:.2f} | {m['p99_ms']:.2f} | "
+            f"{m['deadline_miss_rate']:.3f} | "
+            + (f"{gpw:.4f}" if gpw is not None and gpw == gpw else "—")
+            + f" | {rung_s} | {'yes' if r['pareto'] else ''} |")
+    return out
 
 
 def serving_table(payload: Dict) -> str:

@@ -416,6 +416,22 @@ class Accelerator:
         return serve_windows(self, stream, batch=batch, path=path,
                              backend=backend)
 
+    def measure_scenario(self, scenario, *, batch: Optional[int] = None,
+                         replicas: int = 1,
+                         state_residency: str = "auto") -> Dict[str, Any]:
+        """Measure THIS session at a serving operating point.
+
+        ``scenario`` is a ``repro.explore.ServingScenario``; a short real
+        ``StreamServer`` (or ``ClusterServer`` when ``replicas > 1``) run
+        is stood up and the ``metrics_summary()``-derived objectives
+        returned (samples/s, p50/p95/p99 ms, deadline-miss rate,
+        GOP/s/W).  This is the re-measurement hook for an autotuned
+        operating point: after ``explore.autotune(..., scenario=...)``,
+        ``session.measure_scenario(scenario)`` verifies the deployed
+        session still meets the SLO it was selected under."""
+        return scenario.run(self, batch=batch, replicas=replicas,
+                            state_residency=state_residency)
+
     # -- reporting ----------------------------------------------------------
 
     def report(self, latency_s: float = PAPER_LATENCY_S,

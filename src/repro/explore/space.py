@@ -31,7 +31,10 @@ from repro.core.qlstm import QLSTMConfig
 # Axis order is the canonical iteration order of ``grid()`` — stable across
 # runs so sweep artifacts diff cleanly.
 AXES = ("fxp", "hs_method", "compute_unit", "alu_mode",
-        "hidden_size", "num_layers", "batch", "backend", "cell")
+        "hidden_size", "num_layers", "batch", "backend", "cell",
+        "replicas", "state_residency")
+
+STATE_RESIDENCIES = ("auto", "host", "device")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,9 +49,15 @@ class Point:
     num_layers: int
     batch: int
     backend: str
-    # The recurrent cell id (last axis; default keeps pre-cell-axis
-    # records and Point(...) call sites valid).
+    # The recurrent cell id (default keeps pre-cell-axis records and
+    # Point(...) call sites valid).
     cell: str = "lstm"
+    # Serving-side deployment axes (defaults keep pre-serving-axis records
+    # and positional Point(...) call sites valid): how many cluster
+    # replicas the point deploys as, and where the per-stream carry lives
+    # (auto | host | device — the ServingConfig knob).
+    replicas: int = 1
+    state_residency: str = "auto"
 
     def configs(self, base_model: Optional[QLSTMConfig] = None,
                 base_accel: Optional[AcceleratorConfig] = None,
@@ -74,14 +83,21 @@ class Point:
     def label(self) -> str:
         """Stable human/machine-readable id, e.g.
         ``a4b8_step_mxu_pipelined_h20x1_b256_auto`` (non-LSTM cells get
-        a ``_gru``/``_rglru`` suffix; LSTM labels are unchanged from the
-        pre-cell-axis era so existing sweep artifacts still diff
-        cleanly)."""
+        a ``_gru``/``_rglru`` suffix; non-default serving axes append
+        ``_rN`` / ``_host``/``_device``.  Default-axis labels are
+        unchanged from earlier eras so existing sweep artifacts still
+        diff cleanly)."""
         base = (f"a{self.fxp.frac_bits}b{self.fxp.total_bits}_"
                 f"{self.hs_method}_{self.compute_unit}_{self.alu_mode}_"
                 f"h{self.hidden_size}x{self.num_layers}_b{self.batch}_"
                 f"{self.backend}")
-        return base if self.cell == "lstm" else f"{base}_{self.cell}"
+        if self.cell != "lstm":
+            base += f"_{self.cell}"
+        if self.replicas != 1:
+            base += f"_r{self.replicas}"
+        if self.state_residency != "auto":
+            base += f"_{self.state_residency}"
+        return base
 
     def asdict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -99,7 +115,12 @@ def _as_tuple(v) -> tuple:
 @dataclasses.dataclass(frozen=True)
 class SearchSpace:
     """Finite choices per Table-2 axis.  Each field accepts a single value
-    or a sequence; singletons pin the axis."""
+    or a sequence; singletons pin the axis.
+
+    ``constraints`` is the space's declarative validity tree (a
+    ``repro.explore.constraints.ConstraintNode``; ``None`` = the package
+    default) — infeasible points are pruned before measurement, see
+    :meth:`feasible`."""
 
     fxp: Sequence[FixedPointConfig] = (FXP_4_8,)
     hs_method: Sequence[str] = ("step",)
@@ -110,6 +131,9 @@ class SearchSpace:
     batch: Sequence[int] = (256,)
     backend: Sequence[str] = ("auto",)
     cell: Sequence[str] = ("lstm",)
+    replicas: Sequence[int] = (1,)
+    state_residency: Sequence[str] = ("auto",)
+    constraints: Optional[object] = None
 
     def __post_init__(self):
         for axis in AXES:
@@ -124,13 +148,26 @@ class SearchSpace:
         _check("compute_unit", self.compute_unit, ("mxu", "vpu"))
         _check("alu_mode", self.alu_mode, ALU_MODES)
         _check("backend", self.backend, BACKENDS)
+        _check("state_residency", self.state_residency, STATE_RESIDENCIES)
         from repro import cells as _cells
         _check("cell", self.cell, _cells.available())
-        for axis in ("hidden_size", "num_layers", "batch"):
+        for axis in ("hidden_size", "num_layers", "batch", "replicas"):
             for v in getattr(self, axis):
                 if not isinstance(v, int) or v < 1:
                     raise ValueError(f"{axis} choices must be positive ints, "
                                      f"got {v!r}")
+
+    def feasible(self, point: Point, base_model=None, base_accel=None
+                 ) -> Optional[str]:
+        """``None`` when ``point`` passes the space's constraint tree,
+        else the violated rule's reason (prefixed with its name).  The
+        sweep prunes non-``None`` points before measurement and records
+        them with the reason."""
+        node = self.constraints
+        if node is None:
+            from repro.explore.constraints import default_constraints
+            node = default_constraints()
+        return node.check(point, base_model, base_accel)
 
     @property
     def size(self) -> int:
@@ -177,9 +214,11 @@ def point_from_config(config: dict) -> Point:
     kw = dict(config)
     kw["fxp"] = FixedPointConfig(kw["fxp"]["frac_bits"],
                                  kw["fxp"]["total_bits"])
-    # Records written before the cell axis existed have no "cell" key —
-    # they were all LSTM points.
+    # Records written before the cell / serving axes existed have no keys
+    # for them — they were single-replica LSTM points with auto residency.
     kw.setdefault("cell", "lstm")
+    kw.setdefault("replicas", 1)
+    kw.setdefault("state_residency", "auto")
     return Point(**{a: kw[a] for a in AXES})
 
 
@@ -200,11 +239,14 @@ def paper_space(batch: int = 256) -> SearchSpace:
                        batch=(batch,))
 
 
-def smoke_space(batch: int = 32, cell: Sequence[str] = ("lstm",)
-                ) -> SearchSpace:
+def smoke_space(batch: int = 32, cell: Sequence[str] = ("lstm",),
+                replicas: Sequence[int] = (1,),
+                state_residency: Sequence[str] = ("auto",)) -> SearchSpace:
     """Four cheap CPU-safe points per cell (fixed-point format x ALU
     mode) — the deterministic sweep CI runs and tests assert on.  ``cell``
     widens the sweep across the registered cell zoo (``bench_pareto``
-    passes all three)."""
+    passes all three); ``replicas``/``state_residency`` open the serving
+    deployment axes for scenario sweeps."""
     return SearchSpace(fxp=(FXP_4_8, FXP_8_16), alu_mode=ALU_MODES,
-                       batch=(batch,), cell=cell)
+                       batch=(batch,), cell=cell, replicas=replicas,
+                       state_residency=state_residency)

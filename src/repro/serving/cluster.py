@@ -487,6 +487,24 @@ class ClusterServer:
         for srv in servers:
             srv.reset_metrics()
 
+    def reset_streams(self) -> None:
+        """Forget every stream on every replica AND the router's
+        per-stream bookkeeping (route affinity, history, pending reset
+        flags) — the cluster form of ``StreamServer.reset_streams``, used
+        by the scenario harness's short-run reset.  Replicas, their
+        compiled sessions, and the hash ring survive; undelivered results
+        of removed replicas (the stash) are NOT dropped.  Call it
+        quiescent (between submission rounds), not concurrently with
+        ``submit``."""
+        with self._lock:
+            servers = list(self._servers.values())
+        for srv in servers:
+            srv.reset_streams()
+        with self._lock:
+            self._route.clear()
+            self._hist.clear()
+            self._reset_pending.clear()
+
     def metrics_summary(self) -> Dict:
         """The cluster report: the aggregate block a single server would
         produce — merged rolling-window percentiles and cluster-wide

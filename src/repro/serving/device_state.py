@@ -211,6 +211,12 @@ class DeviceStateStore:
         with self._lock:
             return self._alloc.release(stream_id)
 
+    def ids(self) -> List[Hashable]:
+        """Snapshot of the stream ids currently holding slots, LRU-first —
+        the server's ``reset_streams()`` walks it to end every stream."""
+        with self._lock:
+            return list(self._alloc.live())
+
     # -- planned movement (cluster drain/rebalance) --------------------------
 
     def read_state(self, stream_id: Hashable) -> Optional[StreamState]:

@@ -243,6 +243,10 @@ class FaultyStateStore:
         """Delegates to the wrapped store."""
         return self._store.pop(stream_id)
 
+    def ids(self) -> List[Hashable]:
+        """Delegates to the wrapped store (``reset_streams`` support)."""
+        return self._store.ids()
+
     def stats(self) -> Dict[str, int]:
         """The wrapped store's counters."""
         return self._store.stats()

@@ -440,6 +440,28 @@ class StreamServer:
             # put and erase a reborn stream's carry (or miss a stale one).
             self.states.pop(stream_id)
 
+    def reset_streams(self) -> None:
+        """Forget EVERY stream — carries and sequence numbering — without
+        tearing down the server: threads, compiled sessions, and (on the
+        device path) the resident slot table all survive, so the next
+        window is served by a warm datapath from a zero carry.
+
+        This is the scenario harness's short-run reset
+        (``repro.explore.serving_objective``): warm up once, then
+        ``reset_streams()`` + ``reset_metrics()`` give a fresh measurement
+        interval on an already-compiled server, point after point.
+        Flushes first; call it between submission rounds, not concurrently
+        with ``submit``."""
+        self.flush()
+        with self._seq_lock:
+            ids = set(self._seq)
+        if self.states is not None:
+            # Streams seeded via seed_stream_state but never submitted
+            # hold a carry without a _seq entry — end those too.
+            ids.update(self.states.ids())
+        for sid in ids:
+            self.end_stream(sid)
+
     def read_stream_state(self, stream_id: Hashable):
         """A host-side copy of a stream's carry (per layer, a tuple of the
         cell's ``state_arity`` int32 rows — ``[(h, c), ...]`` for the

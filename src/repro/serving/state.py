@@ -85,6 +85,12 @@ class StateStore:
         with self._lock:
             return self._states.pop(stream_id, None)
 
+    def ids(self) -> List[Hashable]:
+        """Snapshot of the live stream ids, LRU-first — the server's
+        ``reset_streams()`` walks it to end every stream."""
+        with self._lock:
+            return list(self._states)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._states)

@@ -272,7 +272,8 @@ def test_stream_state_read_seed_roundtrip(cell):
 # ---------------------------------------------------------------------------
 
 def test_explore_cell_axis():
-    assert explore.AXES[-1] == "cell"
+    # cell sits between the Table-2 axes and the PR-10 serving axes
+    assert explore.AXES[-3:] == ("cell", "replicas", "state_residency")
     space = explore.SearchSpace(cell=("lstm", "gru"))
     assert space.size == 2
     labels = [p.label for p in space.grid()]

@@ -1,0 +1,126 @@
+"""CI gate for the ``BENCH_pareto.json`` artifact (schema v2).
+
+Usage::
+
+    python tools/check_pareto_schema.py BENCH_pareto.json
+    python tools/check_pareto_schema.py --expect-operating-point BENCH.json
+
+Asserts the payload is the schema ``repro.explore.sweep`` promises —
+version 2, the required top-level keys, one well-formed row per point —
+and, for serving-aware payloads (a ``scenario`` is present, or
+``--expect-operating-point`` demands one), that every ok row carries the
+serving ``operating_point`` record and a halving sweep carries its full
+rung-promotion trace.  Exits 1 with a message naming the first violation,
+so a schema drift fails the workflow instead of silently shipping an
+artifact the report and ``autotune(payload=...)`` cannot read.
+"""
+
+import json
+import sys
+
+TOP_KEYS = ("suite", "schema_version", "mode", "strategy", "seed", "space",
+            "objectives", "points", "front", "front_reason")
+ROW_KEYS = ("label", "config", "status", "pareto")
+OK_ROW_KEYS = ("plan", "metrics")
+OPERATING_POINT_KEYS = ("scenario", "rung", "fraction", "final", "p99_ms",
+                        "deadline_miss_rate", "constraint", "feasible")
+HALVING_KEYS = ("eta", "sizes", "fractions", "rungs", "winner_label",
+                "winner_feasible", "total_measurements", "budget_bound",
+                "objective", "sense", "constraint")
+RUNG_KEYS = ("rung", "fraction", "measured", "ranking", "promoted")
+
+
+def fail(msg: str) -> None:
+    print(f"[check_pareto_schema] FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(payload: dict, *, expect_operating_point: bool = False) -> None:
+    if payload.get("suite") != "pareto":
+        fail(f"suite is {payload.get('suite')!r}, expected 'pareto'")
+    if payload.get("schema_version") != 2:
+        fail(f"schema_version is {payload.get('schema_version')!r}, "
+             f"expected 2")
+    for k in TOP_KEYS:
+        if k not in payload:
+            fail(f"missing top-level key {k!r}")
+    serving = payload.get("scenario") is not None
+    if expect_operating_point and not serving:
+        fail("--expect-operating-point but the payload has no scenario")
+    points = payload["points"]
+    if not isinstance(points, list) or not points:
+        fail("points must be a non-empty list")
+    labels = set()
+    n_ok = 0
+    for i, r in enumerate(points):
+        for k in ROW_KEYS:
+            if k not in r:
+                fail(f"points[{i}] missing {k!r}")
+        if r["label"] in labels:
+            fail(f"duplicate point label {r['label']!r}")
+        labels.add(r["label"])
+        if r["status"] == "ok":
+            n_ok += 1
+            for k in OK_ROW_KEYS:
+                if k not in r:
+                    fail(f"ok point {r['label']!r} missing {k!r}")
+            if serving:
+                op = r.get("operating_point")
+                if not isinstance(op, dict):
+                    fail(f"serving point {r['label']!r} has no "
+                         f"operating_point record")
+                for k in OPERATING_POINT_KEYS:
+                    if k not in op:
+                        fail(f"operating_point of {r['label']!r} "
+                             f"missing {k!r}")
+        elif r["status"] in ("unsupported", "infeasible", "failed"):
+            if not r.get("reason"):
+                fail(f"{r['status']} point {r['label']!r} carries no reason")
+        else:
+            fail(f"points[{i}] has unknown status {r['status']!r}")
+    for lab in payload["front"]:
+        if lab not in labels:
+            fail(f"front label {lab!r} is not a swept point")
+    if not payload["front"] and n_ok and not payload["front_reason"]:
+        fail("empty front over ok points but no front_reason recorded")
+    if payload.get("strategy") == "halving":
+        tr = payload.get("halving")
+        if not isinstance(tr, dict):
+            fail("strategy='halving' but no halving trace recorded")
+        for k in HALVING_KEYS:
+            if k not in tr:
+                fail(f"halving trace missing {k!r}")
+        if len(tr["sizes"]) != len(tr["rungs"]):
+            fail(f"halving trace has {len(tr['sizes'])} sizes but "
+                 f"{len(tr['rungs'])} rung records")
+        for rec in tr["rungs"]:
+            for k in RUNG_KEYS:
+                if k not in rec:
+                    fail(f"halving rung record missing {k!r}")
+        if tr["total_measurements"] > tr["budget_bound"]:
+            fail(f"halving spent {tr['total_measurements']} measurements, "
+                 f"over the analytic bound {tr['budget_bound']}")
+        if tr["fractions"] and tr["fractions"][-1] != 1.0:
+            fail(f"final halving rung ran fraction "
+                 f"{tr['fractions'][-1]}, expected the full scenario (1.0)")
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    expect_op = "--expect-operating-point" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 1:
+        fail("usage: check_pareto_schema.py [--expect-operating-point] "
+             "BENCH_pareto.json")
+    with open(paths[0]) as f:
+        payload = json.load(f)
+    check(payload, expect_operating_point=expect_op)
+    serving = payload.get("scenario") is not None
+    print(f"[check_pareto_schema] OK: {paths[0]} — schema v2, "
+          f"{len(payload['points'])} points, "
+          f"{len(payload['front'])} on the front"
+          f"{' (serving-aware)' if serving else ''}")
+
+
+if __name__ == "__main__":
+    main()
